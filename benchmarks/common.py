@@ -1,0 +1,80 @@
+"""Shared driver for the paper-table benchmarks (CPU smoke scale).
+
+Each benchmark trains a reduced model on the synthetic learnable stream and
+reports final eval CE / accuracy. Absolute numbers are not ImageNet/GLUE —
+the reproduction target at this scale is the paper's ORDERINGS (ours >=
+baseline+KD >= baseline; OBR lowers oscillation; MDQ lowers SDAM; MCKD is
+cheaper per step than vanilla KD).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import get_config, reduced_config
+from repro.core.policy import QuantConfig
+from repro.data.mckd_store import synthetic_kd_labels
+from repro.data.synthetic import DataConfig, sample_batch
+from repro.models import model as M
+from repro.optim.adamw import AdamWConfig
+from repro.train.state import TrainConfig, init_state
+from repro.train.train_step import make_eval_step, make_train_step
+
+DCFG = DataConfig(p_noise=0.05)
+BATCH, SEQ = 16, 16
+
+
+def bench_model(arch: str = "qwen1.5-0.5b", n_layers: int = 2):
+    return reduced_config(get_config(arch)).replace(n_layers=n_layers)
+
+
+def train_eval(cfg, qcfg: QuantConfig, tcfg: TrainConfig, *, steps: int = 60,
+               seed: int = 0, teacher_forward=None, step_fn=None, dcfg=None):
+    """Train `steps`, return dict(final ce, acc, osc%, wall time / step)."""
+    dcfg = dcfg or DCFG
+    key = jax.random.PRNGKey(seed)
+    state = init_state(key, cfg, qcfg, tcfg)
+    if step_fn is None:
+        step_fn = make_train_step(cfg, qcfg, tcfg, teacher_forward=teacher_forward)
+    step = jax.jit(step_fn)
+    losses = []
+    t0 = None
+    for i in range(steps):
+        batch = sample_batch(cfg, dcfg, i, BATCH, SEQ)
+        if tcfg.kd == "mckd":
+            idx, p = synthetic_kd_labels(batch["labels"], cfg.vocab_size,
+                                         tcfg.kd_topk, seed=i)
+            batch = {**batch, "kd_idx": idx, "kd_p": p}
+        state, m = step(state, batch)
+        if i == 1:
+            jax.block_until_ready(m["loss"])
+            t0 = time.monotonic()
+        losses.append(float(m["loss"]))
+    jax.block_until_ready(m["loss"])
+    per_step = (time.monotonic() - t0) / max(1, steps - 2)
+    ev = jax.jit(make_eval_step(cfg, qcfg))
+    evs = [ev(state["params"], sample_batch(cfg, dcfg, 10_000 + j, BATCH, SEQ))
+           for j in range(4)]
+    out = {
+        "final_loss": losses[-1],
+        "eval_ce": float(np.mean([float(e["ce"]) for e in evs])),
+        "eval_acc": float(np.mean([float(e["acc"]) for e in evs])),
+        "s_per_step": per_step,
+    }
+    if "osc_frac" in m:
+        out["osc_pct"] = 100.0 * float(m["osc_frac"])
+    return out, state
+
+
+def default_tcfg(**kw) -> TrainConfig:
+    base = dict(total_steps=80, warmup_steps=4,
+                adamw=AdamWConfig(lr_peak=5e-3))
+    base.update(kw)
+    return TrainConfig(**base)
+
+
+def csv_row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

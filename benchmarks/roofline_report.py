@@ -1,0 +1,81 @@
+"""Roofline table from the dry-run sweep (EXPERIMENTS.md Sec. Roofline source).
+
+Reads dryrun_results.jsonl and prints, per (arch x shape x mesh):
+three roofline terms, dominant bottleneck, MODEL_FLOPS/HLO ratio, memory
+fit, and a one-line mitigation hint for the dominant term.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+HINTS = {
+    "compute_s": "raise useful-FLOPs ratio: cut remat waste / MoE capacity slack",
+    "memory_s": "cut HBM traffic: fuse fake-quant into matmuls (Pallas), bf16 "
+                "attention probs, flash-style no-materialize attention",
+    "collective_s": "reshard: reduce FSDP regathers per microbatch, overlap "
+                    "psum with compute, compress cross-pod grads (int8)",
+}
+
+
+def load(path: str = "dryrun_results.jsonl"):
+    recs = []
+    if not os.path.exists(path):
+        return recs
+    with open(path) as f:
+        for line in f:
+            try:
+                recs.append(json.loads(line))
+            except json.JSONDecodeError:
+                pass
+    # keep the LAST record per cell (later rows override: hillclimb re-runs)
+    dedup = {}
+    for r in recs:
+        dedup[(r["arch"], r["shape"], r["multi_pod"], r.get("preset", ""))] = r
+    return list(dedup.values())
+
+
+def table(recs, *, multi_pod=False):
+    rows = []
+    for r in recs:
+        if r["multi_pod"] != multi_pod:
+            continue
+        if r["status"] == "skipped":
+            rows.append((r["arch"], r["shape"], "SKIP", r.get("reason", "")[:60],
+                         "", "", "", "", ""))
+            continue
+        if r["status"] != "ok":
+            rows.append((r["arch"], r["shape"], "ERR",
+                         (r.get("error") or "")[:60], "", "", "", "", ""))
+            continue
+        roof = r["roofline"]
+        rows.append((
+            r["arch"], r["shape"], roof["dominant"].replace("_s", ""),
+            f"{roof['compute_s']:.2e}", f"{roof['memory_s']:.2e}",
+            f"{roof['collective_s']:.2e}",
+            f"{roof.get('useful_flops_ratio', 0):.3f}",
+            f"{roof.get('roofline_fraction', 0):.4f}",
+            "fits" if r.get("fits_16g") else
+            f"OOM:{r['per_device_bytes'] / 2**30:.0f}G",
+        ))
+    return rows
+
+
+def main():
+    recs = load()
+    if not recs:
+        print("no dryrun_results.jsonl found — run repro.launch.dryrun first")
+        return []
+    hdr = ("arch", "shape", "bound", "compute_s", "memory_s", "coll_s",
+           "useful", "roof_frac", "mem")
+    print(("%-22s %-12s %-7s %-10s %-10s %-10s %-7s %-9s %-9s") % hdr)
+    for row in table(recs, multi_pod=False):
+        print(("%-22s %-12s %-7s %-10s %-10s %-10s %-7s %-9s %-9s") % row)
+    n_multi = sum(1 for r in recs if r["multi_pod"] and r["status"] == "ok")
+    n_multi_bad = sum(1 for r in recs if r["multi_pod"] and r["status"] == "error")
+    print(f"# multi-pod (2x16x16) cells: {n_multi} ok, {n_multi_bad} failed")
+    return recs
+
+
+if __name__ == "__main__":
+    main()

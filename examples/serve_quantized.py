@@ -1,0 +1,87 @@
+"""Batched serving of a quantized model: prefill + decode with int8 weights
+and an int8 per-head-scaled KV cache (the paper's MDQ granularity applied to
+inference state).
+
+    PYTHONPATH=src python examples/serve_quantized.py --new-tokens 16
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import get_config, reduced_config
+from repro.core.policy import QuantConfig
+from repro.data.synthetic import DataConfig, sample_batch
+from repro.models import model as M
+from repro.models.common import convert_to_serving
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-8b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32, dest="prompt_len")
+    ap.add_argument("--new-tokens", type=int, default=16, dest="new_tokens")
+    ap.add_argument("--kv-bits", type=int, default=8, dest="kv_bits")
+    args = ap.parse_args()
+
+    cfg = reduced_config(get_config(args.arch))
+    qcfg = QuantConfig(w_bits=8, a_bits=32, mode="mdq",
+                       kv_cache_bits=args.kv_bits)
+    key = jax.random.PRNGKey(0)
+    params = M.init_params(key, cfg, qcfg)
+    sparams = convert_to_serving(params, qcfg)
+
+    fp_bytes = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(params))
+    srv_bytes = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(sparams))
+    print(f"arch={cfg.name}  weights: {fp_bytes / 2**20:.1f}MiB fp -> "
+          f"{srv_bytes / 2**20:.1f}MiB int-coded "
+          f"({fp_bytes / srv_bytes:.1f}x smaller)")
+
+    b, s = args.batch, args.prompt_len
+    total = s + args.new_tokens
+    batch = sample_batch(cfg, DataConfig(), 0, b, s)
+    prompts = batch["tokens"]
+
+    # prefill: full forward + cache construction
+    @jax.jit
+    def prefill(params, tokens):
+        logits, (cache, _) = M.forward(params, {"tokens": tokens}, cfg, qcfg,
+                                       collect_cache=True)
+        return logits[:, -1], cache
+
+    # the prefill cache is s-long; decode needs room for new tokens -> build
+    # a full-size cache and replay the prompt through decode_step (simple,
+    # robust path; production would reshard the prefill cache instead)
+    cache = M.init_cache(cfg, qcfg, b, total)
+    decode = jax.jit(lambda p, c, bb: M.decode_step(p, c, bb, cfg, qcfg))
+
+    t0 = time.monotonic()
+    last = None
+    for t in range(s):
+        last, cache = decode(sparams, cache,
+                             {"tokens": prompts[:, t:t + 1],
+                              "pos": jnp.full((b,), t, jnp.int32)})
+    out_tokens = []
+    tok = jnp.argmax(last[:, 0], -1)[:, None]
+    for t in range(s, total):
+        out_tokens.append(tok)
+        logits, cache = decode(sparams, cache,
+                               {"tokens": tok, "pos": jnp.full((b,), t, jnp.int32)})
+        tok = jnp.argmax(logits[:, 0], -1)[:, None]
+    jax.block_until_ready(tok)
+    dt = time.monotonic() - t0
+    gen = jnp.concatenate(out_tokens, axis=1)
+    print(f"generated {args.new_tokens} tokens x {b} sequences "
+          f"in {dt:.2f}s ({b * total / dt:.0f} tok/s incl. prompt replay)")
+    print("sample continuation ids:", gen[0].tolist())
+
+    cache_leaves = jax.tree.leaves(cache)
+    cache_bytes = sum(x.size * x.dtype.itemsize for x in cache_leaves)
+    print(f"KV cache: {cache_bytes / 2**20:.2f}MiB at int{args.kv_bits} "
+          f"(bf16 would be ~{cache_bytes * (2 if args.kv_bits == 8 else 4) / 2**20:.2f}MiB)")
+
+
+if __name__ == "__main__":
+    main()

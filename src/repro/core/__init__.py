@@ -1,0 +1,24 @@
+"""Core library: the paper's variation-aware quantization technique.
+
+Public surface:
+  QuantSpec, QuantConfig, fake_quant, quantize_int, dequantize_int,
+  init_scale, weight_spec, act_spec, obr_loss, obr_lambda_schedule,
+  OscState, update_osc_state, oscillation_fraction, kd losses, sdam.
+"""
+from repro.core.quantizer import (  # noqa: F401
+    QuantSpec, fake_quant, fake_quant_jit, quantize_int, dequantize_int,
+    init_scale, init_offset, round_ste, sign_ste, grad_scale, EPS_SCALE,
+)
+from repro.core.policy import (  # noqa: F401
+    QuantConfig, weight_spec, act_spec, kv_cache_spec, get_preset, PRESETS,
+    ALL_KINDS,
+)
+from repro.core.obr import obr_loss, obr_lambda_schedule, total_obr_loss, per_bin_moments, kure_loss  # noqa: F401
+from repro.core.oscillation import (  # noqa: F401
+    OscState, init_osc_state, update_osc_state, oscillation_fraction,
+)
+from repro.core.kd import (  # noqa: F401
+    soft_ce, kd_from_teacher_logits, sparse_soft_ce, mckd_loss, hard_ce,
+    make_topk_labels,
+)
+from repro.core.sdam import sdam, mean_sdam  # noqa: F401

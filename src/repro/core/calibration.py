@@ -1,0 +1,31 @@
+"""Activation-scale calibration (LSQ+ init) from a sample batch.
+
+Weights get the closed-form LSQ init (quantizer.init_scale). Activation
+scales/offsets can't be derived from parameters, so we run one forward pass
+in "record" mode: models stash the pre-quantization activations per module
+into a tap dict, and this module turns the stats into initial (scale, offset)
+values. When no sample batch is available the defaults (scale=1, offset=0)
+are used and LSQ+ learning takes over.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantizer import EPS_SCALE, QuantSpec
+
+
+def calibrate_act_scale(sample: jax.Array, spec: QuantSpec):
+    """(scale, offset) from one activation sample.
+
+    Symmetric: s = 2*mean|x|/sqrt(Q_P).  Asymmetric (LSQ+): offset = min(x),
+    s = (max-min)/(Q_P - (-Q_N)) clipped to >= EPS.
+    """
+    x = sample.astype(jnp.float32)
+    if spec.offset:
+        lo = jnp.min(x)
+        hi = jnp.max(x)
+        s = jnp.maximum((hi - lo) / float(spec.q_p + spec.q_n), EPS_SCALE)
+        return s, lo
+    s = jnp.maximum(2.0 * jnp.mean(jnp.abs(x)) / jnp.sqrt(float(spec.q_p)), EPS_SCALE)
+    return s, jnp.zeros((), jnp.float32)

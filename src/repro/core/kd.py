@@ -1,0 +1,86 @@
+"""Knowledge distillation losses (Eq. 8-9).
+
+Vanilla KD (Eq. 8): soft cross-entropy between the full-precision teacher's
+output distribution and the quantized student's. Per the paper, KD is the
+*sole* objective (no one-hot term).
+
+Multi-crop KD (MCKD, Eq. 9): soft labels are PRE-COMPUTED offline for M
+views of each sample and streamed by the data pipeline, so no teacher runs
+during training. For LMs the vocabulary is too large to store dense soft
+labels at 150k classes x tokens, so the store keeps top-K sparse labels
+(probs renormalized over the K support); DESIGN.md documents this scale
+adaptation. Both dense and sparse variants live here.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def soft_ce(student_logits: jax.Array, teacher_probs: jax.Array,
+            mask: jax.Array | None = None) -> jax.Array:
+    """Eq. 8: -(1/N) sum_c p_c^T log p_c^S. Logits (..., C), probs (..., C)."""
+    logp = jax.nn.log_softmax(student_logits.astype(jnp.float32), axis=-1)
+    per_tok = -jnp.sum(teacher_probs.astype(jnp.float32) * logp, axis=-1)
+    if mask is not None:
+        denom = jnp.maximum(jnp.sum(mask), 1.0)
+        return jnp.sum(per_tok * mask) / denom
+    return jnp.mean(per_tok)
+
+
+def kd_from_teacher_logits(student_logits: jax.Array, teacher_logits: jax.Array,
+                           temperature: float = 1.0,
+                           mask: jax.Array | None = None) -> jax.Array:
+    """Vanilla KD with an on-the-fly teacher forward (costly; Tab. 5 row 2)."""
+    t = temperature
+    probs = jax.nn.softmax(jax.lax.stop_gradient(teacher_logits).astype(jnp.float32) / t,
+                           axis=-1)
+    return soft_ce(student_logits / t, probs, mask) * (t * t)
+
+
+def sparse_soft_ce(student_logits: jax.Array, topk_idx: jax.Array,
+                   topk_probs: jax.Array, mask: jax.Array | None = None) -> jax.Array:
+    """MCKD with sparse top-K stored labels.
+
+    Args:
+      student_logits: (..., C)
+      topk_idx:       (..., K) int32 class indices
+      topk_probs:     (..., K) teacher probabilities (renormalized over K)
+    """
+    logp = jax.nn.log_softmax(student_logits.astype(jnp.float32), axis=-1)
+    gathered = jnp.take_along_axis(logp, topk_idx, axis=-1)
+    per_tok = -jnp.sum(topk_probs.astype(jnp.float32) * gathered, axis=-1)
+    if mask is not None:
+        denom = jnp.maximum(jnp.sum(mask), 1.0)
+        return jnp.sum(per_tok * mask) / denom
+    return jnp.mean(per_tok)
+
+
+def mckd_loss(student_logits_crops: jax.Array, topk_idx: jax.Array,
+              topk_probs: jax.Array) -> jax.Array:
+    """Eq. 9: average the sparse soft-CE over the M stored views.
+
+    student_logits_crops: (M, ..., C) student logits for each stored view;
+    topk_idx/topk_probs:  (M, ..., K) stored labels.
+    """
+    losses = jax.vmap(sparse_soft_ce)(student_logits_crops, topk_idx, topk_probs)
+    return jnp.mean(losses)
+
+
+def hard_ce(logits: jax.Array, labels: jax.Array,
+            mask: jax.Array | None = None) -> jax.Array:
+    """Plain next-token CE (used by FP teacher pre-training & no-KD baseline)."""
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    if mask is not None:
+        denom = jnp.maximum(jnp.sum(mask), 1.0)
+        return -jnp.sum(ll * mask) / denom
+    return -jnp.mean(ll)
+
+
+def make_topk_labels(teacher_logits: jax.Array, k: int):
+    """Offline step of MCKD: compress teacher logits to sparse top-K labels."""
+    probs = jax.nn.softmax(teacher_logits.astype(jnp.float32), axis=-1)
+    topk_probs, topk_idx = jax.lax.top_k(probs, k)
+    topk_probs = topk_probs / jnp.maximum(jnp.sum(topk_probs, -1, keepdims=True), 1e-9)
+    return topk_idx.astype(jnp.int32), topk_probs

@@ -1,0 +1,96 @@
+"""Oscillation-aware Bin Regularization (OBR), Eq. 10 of the paper.
+
+  L_OBR = sum_m ( ||w_m^r - w_m^q||_2 + sum_n Var(w_{n,m}^r) )
+
+where n ranges over the quantization bins of module m and the variance term
+only counts bins holding more than two elements. The quantized value w^q and
+the bin memberships are treated as constants (stop_gradient): the regularizer
+pulls latent weights toward their bin center / bin mean, and must not be
+short-circuited by the STE (whose d(w - q(w))/dw is 0 inside the range).
+
+Bins are per scale group: with the paper's per-head scales, a bin is a
+(head, level) pair. Statistics use masked reductions over a static loop on
+the <= 2^b levels (OBR is only enabled at 2-3 bits, so <= 8 iterations);
+`kernels/bin_stats.py` provides the fused Pallas/MXU version for the full
+(count, sum, sumsq) histogram used by telemetry benchmarks.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantizer import EPS_SCALE, QuantSpec, quantize_int
+
+
+def per_bin_moments(w: jax.Array, codes: jax.Array, scale_shape, spec: QuantSpec):
+    """Per-(group, level) count/sum/sumsq via masked reductions.
+
+    Reduces over the axes on which the scale broadcasts (size-1 axes of the
+    scale shape), keeping group axes. Returns three arrays shaped
+    (n_bins, *group_shape).
+    """
+    if len(scale_shape) == 0:
+        axes = tuple(range(w.ndim))
+        keep = False
+    else:
+        axes = tuple(i for i, s in enumerate(scale_shape) if s == 1)
+        keep = True
+    counts, s1s, s2s = [], [], []
+    wf = w.astype(jnp.float32)
+    for lvl in range(-spec.q_n, spec.q_p + 1):
+        m = (codes == lvl).astype(jnp.float32)
+        counts.append(jnp.sum(m, axis=axes, keepdims=keep))
+        s1s.append(jnp.sum(m * wf, axis=axes, keepdims=keep))
+        s2s.append(jnp.sum(m * wf * wf, axis=axes, keepdims=keep))
+    return jnp.stack(counts), jnp.stack(s1s), jnp.stack(s2s)
+
+
+def obr_loss(w: jax.Array, scale: jax.Array, spec: QuantSpec) -> jax.Array:
+    """Eq. 10 for a single module (scale broadcastable against w). Scalar."""
+    scale = jax.lax.stop_gradient(jnp.maximum(scale, EPS_SCALE))
+    codes = jax.lax.stop_gradient(quantize_int(w, scale, spec))
+    # Global term: L2 norm of (w - w_q); w_q constant.
+    w_q = jax.lax.stop_gradient(codes.astype(w.dtype) * scale.astype(w.dtype))
+    l2 = jnp.sqrt(jnp.sum((w.astype(jnp.float32) - w_q.astype(jnp.float32)) ** 2) + 1e-12)
+
+    # Local term: within-bin variance, bins with count > 2 (paper: "more than
+    # two elements"). Memberships are constants; values differentiable.
+    count, s1, s2 = per_bin_moments(w, codes, jnp.shape(scale), spec)
+    cnt = jnp.maximum(count, 1.0)
+    mean = s1 / cnt
+    var = jnp.maximum(s2 / cnt - mean * mean, 0.0)
+    var = jnp.where(count > 2.0, var, 0.0)
+    return l2 + jnp.sum(var)
+
+
+def obr_lambda_schedule(step: jax.Array, total_steps: int, lam_max: float) -> jax.Array:
+    """Cosine ramp 0 -> lam_max (paper Sec. 4.4.3, following Nagel et al. 22)."""
+    if lam_max <= 0.0 or total_steps <= 0:
+        return jnp.asarray(0.0, jnp.float32)
+    frac = jnp.clip(jnp.asarray(step, jnp.float32) / float(total_steps), 0.0, 1.0)
+    return lam_max * 0.5 * (1.0 - jnp.cos(jnp.pi * frac))
+
+
+def total_obr_loss(quant_leaves, lam: jax.Array) -> jax.Array:
+    """Sum Eq. 10 over every quantized module.
+
+    Args:
+      quant_leaves: iterable of (w, scale, spec) triples collected by the
+        model's parameter walker (models/model.py exposes it).
+      lam: schedule-weighted coefficient.
+    """
+    total = jnp.asarray(0.0, jnp.float32)
+    for w, scale, spec in quant_leaves:
+        total = total + obr_loss(w, scale, spec)
+    return lam * total
+
+
+def kure_loss(w: jax.Array, target_kurtosis: float = 1.8) -> jax.Array:
+    """KURE (Chmiel et al., 2020) baseline regularizer for Tab. 7 comparison:
+    penalize deviation of the GLOBAL weight kurtosis from the uniform
+    distribution's 1.8 (contrast: OBR acts per quantization bin)."""
+    wf = w.astype(jnp.float32).reshape(-1)
+    mu = jnp.mean(wf)
+    var = jnp.maximum(jnp.var(wf), 1e-12)
+    kurt = jnp.mean((wf - mu) ** 4) / (var * var)
+    return (kurt - target_kurtosis) ** 2

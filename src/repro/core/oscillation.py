@@ -1,0 +1,64 @@
+"""Oscillation telemetry (Eq. 11-12).
+
+Oscillation at step t:   x_t^int != x_{t-1}^int
+                     and sign(delta_t) != sign(delta at previous change)
+
+Frequency EMA:           f_t = m * o_t + (1 - m) * f_{t-1}
+A weight is "oscillating" when f_t > threshold (paper: 0.005).
+
+State is a small pytree carried per quantized weight tensor inside the train
+state; everything is jit-friendly and sharded like the weights themselves.
+dtype budget: int8 codes + int8 direction + f32 EMA (could be f16; f32 keeps
+the EMA exact for telemetry fidelity).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantizer import QuantSpec, quantize_int
+
+
+class OscState(NamedTuple):
+    prev_int: jax.Array   # int8, same shape as w
+    prev_dir: jax.Array   # int8: sign of delta at the last integer change (0=none yet)
+    freq: jax.Array       # f32 EMA of oscillation events
+
+
+def init_osc_state(w: jax.Array, scale: jax.Array, spec: QuantSpec) -> OscState:
+    codes = quantize_int(w, scale, spec)
+    return OscState(prev_int=codes,
+                    prev_dir=jnp.zeros_like(codes),
+                    freq=jnp.zeros(w.shape, jnp.float32))
+
+
+def update_osc_state(state: OscState, w: jax.Array, scale: jax.Array,
+                     spec: QuantSpec, momentum: float = 0.01) -> OscState:
+    """One Eq. 12 update. Pure; call under jit on the *post-update* weights."""
+    codes = quantize_int(w, scale, spec)
+    delta = codes.astype(jnp.int32) - state.prev_int.astype(jnp.int32)
+    changed = delta != 0
+    direction = jnp.sign(delta).astype(jnp.int8)
+    # o_t: integer value changed AND its direction flips vs. the direction at
+    # the previous change (Eq. 11).
+    flip = changed & (state.prev_dir != 0) & (direction != state.prev_dir)
+    freq = momentum * flip.astype(jnp.float32) + (1.0 - momentum) * state.freq
+    prev_dir = jnp.where(changed, direction, state.prev_dir)
+    return OscState(prev_int=codes, prev_dir=prev_dir, freq=freq)
+
+
+def oscillation_fraction(state: OscState, threshold: float = 0.005) -> jax.Array:
+    """Percentage-style metric of Tab. 7/12/13: fraction with f > threshold."""
+    return jnp.mean((state.freq > threshold).astype(jnp.float32))
+
+
+def dampen_oscillating(w: jax.Array, scale: jax.Array, spec: QuantSpec,
+                       state: OscState, threshold: float = 0.02) -> jax.Array:
+    """Optional hard mitigation (beyond-paper, cf. Nagel'22 freezing): snap
+    weights whose EMA exceeds `threshold` to their current bin center.
+    Disabled by default; exposed for ablations."""
+    codes = quantize_int(w, scale, spec)
+    center = codes.astype(w.dtype) * scale.astype(w.dtype)
+    return jnp.where(state.freq > threshold, center, w)

@@ -1,0 +1,236 @@
+"""Uniform quantizers with learnable scale (LSQ) and offset (LSQ+).
+
+Implements Eq. 5-7 of "Quantization Variation" exactly:
+
+  x_q = s * round(clip(x/s, -Q_N, Q_P))                         (Eq. 5)
+  dL/dx   = dL/dx_q * 1[-Q_N <= x/s <= Q_P]                     (Eq. 6, STE)
+  dx_q/ds = round(x/s) - x/s   inside the range                 (Eq. 7)
+          = -Q_N / Q_P         below / above the range
+
+The gradient identities fall out of composing `round_ste` with `jnp.clip`,
+so no custom_vjp is required; tests/test_quantizer.py checks them against
+hand-derived values.
+
+Scale convention: scales are stored BROADCASTABLE against their tensor.
+A per-head scale for a (d_model, heads, head_dim) weight is shaped
+(1, heads, 1); per-tensor scales are 0-d. This composes transparently with
+vmap-stacked layer parameters (scan over layers adds a leading axis to both
+weight and scale) and with sharding rules (the >1-sized scale axis shards
+with the matching weight axis).
+
+The paper's module-wise gradient scaling (Sec. 4.4.1) replaces LSQ's
+g = 1/sqrt(N*Q_P) with g = 1/sqrt(Q_P * ||w||_1), computed per scale group.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+# Minimum representable scale; keeps division well-posed when s is learned.
+EPS_SCALE = 1e-9
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantSpec:
+    """Static description of one quantizer (hashable; safe as a jit static)."""
+
+    bits: int = 8
+    signed: bool = True
+    # Granularity label (drives init + policy decisions; the actual grouping
+    # is carried by the scale's broadcastable shape):
+    #   per_tensor | per_head | per_expert | per_channel
+    granularity: str = "per_tensor"
+    # LSQ+ learnable offset (asymmetric quantization, used for activations).
+    offset: bool = False
+    # Gradient scale mode for the learnable scale factor:
+    #   "module_l1": paper's g = 1/sqrt(Q_P*||w||_1)   (variation-aware)
+    #   "lsq"      : g = 1/sqrt(N*Q_P)                 (LSQ/LSQ+ baseline)
+    #   "none"     : g = 1
+    grad_scale_mode: str = "module_l1"
+
+    def __post_init__(self):
+        if self.bits < 1 or self.bits > 8:
+            raise ValueError(f"bits must be in [1, 8], got {self.bits}")
+        if self.granularity not in ("per_tensor", "per_head", "per_expert", "per_channel"):
+            raise ValueError(f"unknown granularity {self.granularity!r}")
+        if self.grad_scale_mode not in ("module_l1", "lsq", "none"):
+            raise ValueError(f"unknown grad_scale_mode {self.grad_scale_mode!r}")
+
+    @property
+    def q_n(self) -> int:
+        """Number of negative levels (Eq. 5)."""
+        if self.bits == 1:
+            return 1 if self.signed else 0
+        return 2 ** (self.bits - 1) if self.signed else 0
+
+    @property
+    def q_p(self) -> int:
+        """Number of positive levels (Eq. 5)."""
+        if self.bits == 1:
+            return 1
+        return 2 ** (self.bits - 1) - 1 if self.signed else 2**self.bits - 1
+
+    @property
+    def n_bins(self) -> int:
+        return self.q_n + self.q_p + 1
+
+
+def round_ste(x: jax.Array) -> jax.Array:
+    """round(x) in the forward pass, identity gradient in the backward pass."""
+    return x + jax.lax.stop_gradient(jnp.round(x) - x)
+
+
+def sign_ste(x: jax.Array) -> jax.Array:
+    """Binary (+-1) forward, clipped-identity backward (|x|<=1 window)."""
+    s = jnp.where(x >= 0, 1.0, -1.0).astype(x.dtype)
+    passthrough = jnp.clip(x, -1.0, 1.0)
+    return passthrough + jax.lax.stop_gradient(s - passthrough)
+
+
+def grad_scale(x: jax.Array, g: jax.Array) -> jax.Array:
+    """Identity forward; multiplies the incoming gradient by ``g``."""
+    g = jax.lax.stop_gradient(g)
+    return x * g + jax.lax.stop_gradient(x - x * g)
+
+
+def _group_reduce_axes(scale_shape: tuple[int, ...], x_shape: tuple[int, ...]):
+    """Axes of x reduced per scale group (where the scale broadcasts)."""
+    if len(scale_shape) == 0:
+        return tuple(range(len(x_shape)))
+    assert len(scale_shape) == len(x_shape), (
+        f"scale shape {scale_shape} must be 0-d or match rank of {x_shape}")
+    return tuple(i for i, s in enumerate(scale_shape) if s == 1)
+
+
+def scale_grad_factor(spec: QuantSpec, w: jax.Array,
+                      scale_shape: tuple[int, ...]) -> jax.Array:
+    """Gradient scale g for the learnable scale factor, shaped like the scale.
+
+    module_l1 (paper, Sec 4.4.1): g = 1 / sqrt(Q_P * ||w||_1) per scale group,
+    so modules with outlier-heavy (large-|w|) distributions update their scale
+    more conservatively.
+    """
+    if spec.grad_scale_mode == "none":
+        return jnp.ones(scale_shape, jnp.float32)
+    axes = _group_reduce_axes(scale_shape, w.shape)
+    if spec.grad_scale_mode == "lsq":
+        n = 1.0
+        for a in axes:
+            n *= w.shape[a]
+        return jnp.full(scale_shape, 1.0 / jnp.sqrt(n * spec.q_p), jnp.float32)
+    # module_l1
+    l1 = jnp.sum(jnp.abs(w.astype(jnp.float32)), axis=axes,
+                 keepdims=bool(len(scale_shape)))
+    return 1.0 / jnp.sqrt(spec.q_p * jnp.maximum(l1, EPS_SCALE))
+
+
+def fake_quant(
+    x: jax.Array,
+    scale: jax.Array,
+    spec: QuantSpec,
+    offset: Optional[jax.Array] = None,
+    grad_scale_ref: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Quantize-dequantize ``x`` with learnable ``scale`` (and LSQ+ ``offset``).
+
+    Args:
+      x: tensor to fake-quantize.
+      scale: learnable scale, 0-d or broadcastable against x (1s on reduced
+        axes, group sizes elsewhere).
+      spec: static quantizer description.
+      offset: optional learnable zero offset (LSQ+, for activations), same
+        shape convention as scale.
+      grad_scale_ref: tensor whose L1 norm defines the module-wise gradient
+        scale (defaults to ``x`` itself; pass the *weights* when quantizing
+        activations of a module so the module identity is consistent).
+
+    Returns:
+      Fake-quantized tensor, same shape/dtype as x.
+    """
+    if grad_scale_ref is None:
+        ref = jax.lax.stop_gradient(x)
+        g = scale_grad_factor(spec, ref, jnp.shape(scale))
+    else:
+        ref = jax.lax.stop_gradient(grad_scale_ref)
+        if jnp.shape(scale) == () or len(jnp.shape(ref)) == len(jnp.shape(scale)):
+            g = scale_grad_factor(spec, ref, jnp.shape(scale))
+        else:
+            # Activation scale (0-d or per-tensor) keyed on module weights of
+            # different rank: reduce fully.
+            g = scale_grad_factor(spec, ref, ())
+            g = jnp.broadcast_to(g, jnp.shape(scale))
+    s = grad_scale(scale, g)
+    s = jnp.maximum(s, EPS_SCALE).astype(x.dtype)
+
+    if offset is not None:
+        b = grad_scale(offset, g).astype(x.dtype)
+        xs = (x - b) / s
+    else:
+        xs = x / s
+
+    if spec.bits == 1 and spec.signed:
+        xq = sign_ste(xs) * s
+    else:
+        xs = jnp.clip(xs, -float(spec.q_n), float(spec.q_p))
+        xq = round_ste(xs) * s
+
+    if offset is not None:
+        xq = xq + b
+    return xq
+
+
+def quantize_int(x: jax.Array, scale: jax.Array, spec: QuantSpec,
+                 offset: Optional[jax.Array] = None) -> jax.Array:
+    """Integer codes (no STE; used for serving, bin stats, oscillation)."""
+    s = jnp.maximum(scale, EPS_SCALE)
+    xs = x / s if offset is None else (x - offset) / s
+    if spec.bits == 1 and spec.signed:
+        return jnp.where(xs >= 0, 1, -1).astype(jnp.int8)
+    return jnp.clip(jnp.round(xs), -spec.q_n, spec.q_p).astype(jnp.int8)
+
+
+def dequantize_int(codes: jax.Array, scale: jax.Array, spec: QuantSpec,
+                   offset: Optional[jax.Array] = None,
+                   dtype=jnp.float32) -> jax.Array:
+    out = codes.astype(dtype) * jnp.maximum(scale, EPS_SCALE).astype(dtype)
+    if offset is not None:
+        out = out + offset.astype(dtype)
+    return out
+
+
+def init_scale(w: jax.Array, spec: QuantSpec,
+               group_axes: tuple[int, ...] = ()) -> jax.Array:
+    """LSQ init: s = 2*mean(|w|)/sqrt(Q_P), per scale group.
+
+    group_axes: axes of w that index groups (e.g. the head axis). The result
+    keeps those axes and has size-1 elsewhere (broadcastable convention);
+    with no group axes the result is 0-d (per-tensor).
+    """
+    if not group_axes:
+        m = jnp.mean(jnp.abs(w.astype(jnp.float32)))
+        return jnp.maximum(2.0 * m / jnp.sqrt(float(spec.q_p)), EPS_SCALE)
+    axes = tuple(i for i in range(w.ndim) if i not in group_axes)
+    m = jnp.mean(jnp.abs(w.astype(jnp.float32)), axis=axes, keepdims=True)
+    return jnp.maximum(2.0 * m / jnp.sqrt(float(spec.q_p)), EPS_SCALE)
+
+
+def init_offset(w: jax.Array, spec: QuantSpec,
+                group_axes: tuple[int, ...] = ()) -> jax.Array:
+    if not group_axes:
+        return jnp.zeros((), jnp.float32)
+    shape = tuple(w.shape[i] if i in group_axes else 1 for i in range(w.ndim))
+    return jnp.zeros(shape, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Convenience jit'd entry points (used by benchmarks; models call fake_quant
+# directly inside their own jitted steps).
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("spec",))
+def fake_quant_jit(x, scale, spec: QuantSpec):
+    return fake_quant(x, scale, spec)

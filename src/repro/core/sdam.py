@@ -1,0 +1,25 @@
+"""SDAM: Standard Deviation of the Absolute Mean (Tab. 2 / Tab. 6).
+
+Quantifies distribution variation across channels of a module's activations
+(or weights): for each channel c, take the mean of |x| over every other
+axis; SDAM is the standard deviation of those per-channel absolute means.
+Transformers show ~2x the SDAM of ConvNets (Tab. 2), which is the paper's
+V2 evidence; Tab. 6 uses SDAM to show MDQ reduces variation.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sdam(x: jax.Array, channel_axis: int = -1) -> jax.Array:
+    """SDAM of one tensor along `channel_axis`."""
+    x = jnp.moveaxis(x, channel_axis, -1)
+    abs_mean = jnp.mean(jnp.abs(x.astype(jnp.float32)), axis=tuple(range(x.ndim - 1)))
+    return jnp.std(abs_mean)
+
+
+def mean_sdam(tensors, channel_axis: int = -1) -> jax.Array:
+    """Average SDAM over a collection of module activations (Tab. 2 metric)."""
+    vals = [sdam(t, channel_axis) for t in tensors]
+    return jnp.mean(jnp.stack(vals)) if vals else jnp.asarray(0.0)

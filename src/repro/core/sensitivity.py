@@ -1,0 +1,37 @@
+"""Quantization-sensitivity analysis harness (Tab. 1, Tab. 9, Fig. 3).
+
+Generates QuantConfig variants for:
+  * leave-one-out:       quantize everything EXCEPT one module kind
+  * quantize-one-only:   quantize ONLY one module kind
+  * per-head (Fig. 3):   handled by models' head masks, see `head_mask_configs`
+
+The benchmark drivers (benchmarks/table1_sensitivity.py) run a short QAT for
+each variant and tabulate the metric deltas.
+"""
+from __future__ import annotations
+
+from typing import Iterator
+
+from repro.core.policy import ATTN_KINDS, FFN_KINDS, QuantConfig
+
+# The module groups the paper ablates (Tab. 1 rows).
+GROUPS = {
+    "FFN": FFN_KINDS,
+    "MHSA": ("attn_q", "attn_k", "attn_v", "attn_o"),
+    "query": ("attn_q",),
+    "key": ("attn_k",),
+    "value": ("attn_v",),
+}
+
+
+def leave_one_out_configs(base: QuantConfig) -> Iterator[tuple[str, QuantConfig]]:
+    """Yields (row_name, cfg) per Tab. 1: 'All', then 'All, except <group>'."""
+    yield "All", base
+    for name, kinds in GROUPS.items():
+        yield f"All, except {name}", base.replace(fp_kinds=tuple(kinds))
+
+
+def quantize_one_only_configs(base: QuantConfig) -> Iterator[tuple[str, QuantConfig]]:
+    """Yields (row_name, cfg) per Tab. 9: '<group> only'."""
+    for name, kinds in GROUPS.items():
+        yield f"{name} only", base.replace(only_kinds=tuple(kinds))

@@ -1,0 +1,115 @@
+"""Jit'd dispatch wrappers over the Pallas kernels.
+
+Handle arbitrary-rank tensors (reshape to 2D, pad to tile multiples, unpad),
+QuantSpec plumbing, and the interpret flag (True on CPU; False on real TPU —
+`on_tpu()` picks automatically).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantizer import QuantSpec
+from repro.kernels import bin_stats as _bs
+from repro.kernels import fake_quant as _fq
+from repro.kernels import quant_matmul as _qmm
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad2d(x, bm, bn):
+    m, n = x.shape
+    pm = (-m) % bm
+    pn = (-n) % bn
+    if pm or pn:
+        x = jnp.pad(x, ((0, pm), (0, pn)))
+    return x, m, n
+
+
+def fake_quant(x, scale, spec: QuantSpec, offset=None, *, interpret=None):
+    """Per-tensor fake-quant of an arbitrary-rank tensor (scalar scale)."""
+    interpret = (not on_tpu()) if interpret is None else interpret
+    shape = x.shape
+    x2 = x.reshape(-1, shape[-1]) if x.ndim > 1 else x.reshape(1, -1)
+    bm, bn = _fq.DEFAULT_BLOCK
+    x2p, m, n = _pad2d(x2, bm, bn)
+    out = _fq.fake_quant_2d(x2p, scale, offset, q_n=spec.q_n, q_p=spec.q_p,
+                            interpret=interpret)
+    return out[:m, :n].reshape(shape)
+
+
+def fake_quant_grouped(x, group_scale, spec: QuantSpec, *, interpret=None):
+    """Row-grouped fake-quant: x (G, ...) with scale (G,) — per-head/expert."""
+    interpret = (not on_tpu()) if interpret is None else interpret
+    g = x.shape[0]
+    x2 = x.reshape(g, -1)
+    bm, bn = _fq.DEFAULT_BLOCK
+    x2p, m, n = _pad2d(x2, bm, bn)
+    sc = jnp.pad(group_scale.reshape(-1, 1), ((0, x2p.shape[0] - g), (0, 0)),
+                 constant_values=1.0)
+    out = _fq.fake_quant_rows(x2p, sc, q_n=spec.q_n, q_p=spec.q_p,
+                              interpret=interpret)
+    return out[:m, :n].reshape(x.shape)
+
+
+def quant_matmul(x, w, a_scale, a_offset, w_scale, a_spec: QuantSpec,
+                 w_spec: QuantSpec, *, interpret=None, out_dtype=jnp.float32):
+    """Fused q(x) @ q(w). x (..., K), w (K, N); w_scale () or (N,)."""
+    interpret = (not on_tpu()) if interpret is None else interpret
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    n = w.shape[-1]
+    x2 = x.reshape(-1, k)
+    bm, bn, bk = _qmm.DEFAULT_TILES
+    x2p, m, _ = _pad2d(x2, bm, bk)
+    wp, _, _ = _pad2d(w, bk, bn)
+    ws = jnp.broadcast_to(jnp.asarray(w_scale, jnp.float32).reshape(1, -1),
+                          (1, n))
+    wsp = jnp.pad(ws, ((0, 0), (0, wp.shape[1] - n)), constant_values=1.0)
+    out = _qmm.quant_matmul(
+        x2p, wp, a_scale, a_offset, wsp,
+        q_n_a=a_spec.q_n, q_p_a=a_spec.q_p, q_n_w=w_spec.q_n, q_p_w=w_spec.q_p,
+        interpret=interpret, out_dtype=out_dtype)
+    return out[:m, :n].reshape(*lead, n)
+
+
+def int_matmul(x, w_codes, w_scale, w_spec: QuantSpec, *, interpret=None,
+               out_dtype=jnp.float32):
+    """Serving matmul over int8-coded weights (1 byte/weight HBM reads)."""
+    interpret = (not on_tpu()) if interpret is None else interpret
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    n = w_codes.shape[-1]
+    x2 = x.reshape(-1, k)
+    bm, bn, bk = _qmm.DEFAULT_TILES
+    x2p, m, _ = _pad2d(x2, bm, bk)
+    wp, _, _ = _pad2d(w_codes, bk, bn)
+    ws = jnp.broadcast_to(jnp.asarray(w_scale, jnp.float32).reshape(1, -1), (1, n))
+    wsp = jnp.pad(ws, ((0, 0), (0, wp.shape[1] - n)), constant_values=1.0)
+    out = _qmm.int_matmul(x2p, wp, wsp, q_n_w=w_spec.q_n, q_p_w=w_spec.q_p,
+                          interpret=interpret, out_dtype=out_dtype)
+    return out[:m, :n].reshape(*lead, n)
+
+
+def bin_stats(w, scale, spec: QuantSpec, *, interpret=None):
+    """(count, sum, sumsq) per bin for a per-tensor-scaled weight tensor."""
+    interpret = (not on_tpu()) if interpret is None else interpret
+    w2 = w.reshape(-1, w.shape[-1]) if w.ndim > 1 else w.reshape(1, -1)
+    # rows must tile evenly; pad rows with values far outside the clip range
+    # is wrong (they'd land in edge bins) — instead pad with the scale value
+    # itself and subtract the padded rows' contribution analytically: padded
+    # elements quantize to code round(1.0) = 1 -> bin q_n+1. Simpler: pad to
+    # the row-block multiple with zeros and subtract the zero-bin overcount.
+    bm, _ = _bs.DEFAULT_BLOCK
+    m, n = w2.shape
+    pm = (-m) % min(bm, m) if m else 0
+    if pm:
+        w2 = jnp.pad(w2, ((0, pm), (0, 0)))
+    out = _bs.bin_stats_2d(w2, scale, q_n=spec.q_n, q_p=spec.q_p,
+                           interpret=interpret)
+    if pm:
+        # zeros quantize to code 0 -> bin index q_n; remove their count
+        out = out.at[0, spec.q_n].add(-float(pm * n))
+    return out

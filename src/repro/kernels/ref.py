@@ -1,0 +1,59 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each function mirrors its kernel's exact semantics — tests sweep shapes and
+dtypes and assert_allclose kernel-vs-oracle.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fake_quant_2d(x, scale, offset=None, *, q_n: int, q_p: int):
+    x32 = x.astype(jnp.float32)
+    s = jnp.maximum(jnp.asarray(scale, jnp.float32), 1e-9)
+    b = jnp.asarray(0.0 if offset is None else offset, jnp.float32)
+    xq = jnp.clip(jnp.round((x32 - b) / s), -q_n, q_p)
+    return (xq * s + b).astype(x.dtype)
+
+
+def fake_quant_rows(x, row_scale, *, q_n: int, q_p: int):
+    x32 = x.astype(jnp.float32)
+    s = jnp.maximum(row_scale.astype(jnp.float32), 1e-9)  # (M, 1)
+    xq = jnp.clip(jnp.round(x32 / s), -q_n, q_p)
+    return (xq * s).astype(x.dtype)
+
+
+def quant_matmul(x, w, a_scale, a_offset, w_col_scale, *,
+                 q_n_a: int, q_p_a: int, q_n_w: int, q_p_w: int,
+                 out_dtype=jnp.float32):
+    a_s = jnp.maximum(jnp.asarray(a_scale, jnp.float32), 1e-9)
+    a_b = jnp.asarray(a_offset, jnp.float32)
+    xd = jnp.clip(jnp.round((x.astype(jnp.float32) - a_b) / a_s),
+                  -q_n_a, q_p_a) * a_s + a_b
+    w_s = jnp.maximum(w_col_scale.astype(jnp.float32), 1e-9)
+    wd = jnp.clip(jnp.round(w.astype(jnp.float32) / w_s), -q_n_w, q_p_w) * w_s
+    return jnp.dot(xd.astype(jnp.bfloat16), wd.astype(jnp.bfloat16),
+                   preferred_element_type=jnp.float32).astype(out_dtype)
+
+
+def int_matmul(x, w_codes, w_col_scale, *, q_n_w: int, q_p_w: int,
+               out_dtype=jnp.float32):
+    w_s = jnp.maximum(w_col_scale.astype(jnp.float32), 1e-9)
+    wd = (w_codes.astype(jnp.float32) * w_s).astype(jnp.bfloat16)
+    return jnp.dot(x.astype(jnp.bfloat16), wd,
+                   preferred_element_type=jnp.float32).astype(out_dtype)
+
+
+def bin_stats_2d(w, scale, *, q_n: int, q_p: int):
+    w32 = w.astype(jnp.float32)
+    s = jnp.maximum(jnp.asarray(scale, jnp.float32), 1e-9)
+    codes = jnp.clip(jnp.round(w32 / s), -q_n, q_p) + q_n
+    n_bins = q_n + q_p + 1
+    onehot = jax.nn.one_hot(codes.reshape(-1).astype(jnp.int32), n_bins,
+                            dtype=jnp.float32)
+    flat = w32.reshape(-1)
+    count = jnp.sum(onehot, axis=0)
+    s1 = flat @ onehot
+    s2 = (flat * flat) @ onehot
+    return jnp.stack([count, s1, s2])

@@ -1,0 +1,239 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# --- everything below may import jax ---------------------------------------
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs.base import ArchConfig  # noqa: E402
+from repro.configs.registry import ARCH_IDS, get_config  # noqa: E402
+from repro.configs import shapes as shp  # noqa: E402
+from repro.core.policy import QuantConfig, get_preset  # noqa: E402
+from repro.dist import sharding as shard  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch import hlo_cost  # noqa: E402
+from repro.launch import roofline as rl  # noqa: E402
+from repro.models import model as M  # noqa: E402
+from repro.models.common import convert_to_serving  # noqa: E402
+from repro.train.state import TrainConfig, init_state  # noqa: E402
+from repro.train.train_step import make_train_step  # noqa: E402
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this proves, without hardware:
+  * the sharding config is coherent (SPMD partitioner accepts it),
+  * it fits (memory_analysis),
+  * and it yields the roofline terms (cost_analysis + HLO collective parse).
+
+Results append incrementally to a JSON-lines file so a long sweep is
+restartable and EXPERIMENTS.md tooling can tabulate partial progress.
+"""
+
+
+def _quant_for(shape_kind: str, preset: str, serve_kv_bits: int) -> QuantConfig:
+    q = get_preset(preset)
+    if shape_kind in ("decode", "prefill"):
+        q = q.replace(kv_cache_bits=serve_kv_bits)
+    return q
+
+
+def _train_cfg(cfg: ArchConfig, shape: shp.ShapeSpec, grad_accum: int,
+               bf16_moments: bool = False) -> TrainConfig:
+    # microbatch must stay shardable over dp
+    while grad_accum > 1 and (shape.global_batch % grad_accum
+                              or (shape.global_batch // grad_accum) % 8):
+        grad_accum //= 2
+    from repro.optim.adamw import AdamWConfig
+    adamw = AdamWConfig(moments_dtype="bfloat16" if bf16_moments else "float32")
+    return TrainConfig(total_steps=150_000, warmup_steps=750,
+                       grad_accum=max(1, grad_accum), kd="mckd", kd_topk=16,
+                       adamw=adamw)
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool, preset: str,
+               grad_accum: int, serve_kv_bits: int, donate: bool = True,
+               extra_dp: bool = False, moe_groups: int = 1,
+               bf16_moments: bool = False):
+    cfg = get_config(arch)
+    if cfg.n_experts and moe_groups != 1:
+        dp = 32 if multi_pod else 16
+        cfg = cfg.replace(moe_dispatch_groups=dp if moe_groups == 0 else moe_groups)
+    shape = shp.get_shape(shape_name)
+    ok, reason = shp.shape_applicable(cfg, shape)
+    if not ok:
+        return {"status": "skipped", "reason": reason}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    constrain, logits_constrain = shard.make_constrains(mesh, extra_model_dp=extra_dp)
+    key = jax.random.PRNGKey(0)
+
+    with mesh:
+        if shape.kind == "train":
+            qcfg = _quant_for("train", preset, serve_kv_bits)
+            tcfg = _train_cfg(cfg, shape, grad_accum, bf16_moments)
+            state_shapes = jax.eval_shape(
+                lambda k: init_state(k, cfg, qcfg, tcfg), key)
+            state_specs = shard.state_pspecs(state_shapes, mesh, qcfg, no_tp=extra_dp)
+            state_sh = shard.named_tree(state_specs, mesh)
+            batch_shapes = shp.token_specs(cfg, shape, kd_topk=tcfg.kd_topk)
+            batch_sh = shard.named_tree(
+                shard.batch_pspecs(batch_shapes, mesh, extra_model_dp=extra_dp), mesh)
+            step_fn = make_train_step(cfg, qcfg, tcfg, constrain=constrain,
+                                      logits_constrain=logits_constrain)
+            jitted = jax.jit(step_fn,
+                             in_shardings=(state_sh, batch_sh),
+                             out_shardings=(state_sh, None),
+                             donate_argnums=(0,) if donate else ())
+            lowered = jitted.lower(state_shapes, batch_shapes)
+            tokens = shape.global_batch * shape.seq_len
+            mf = rl.model_flops_per_step(cfg, tokens, train=True)
+        elif shape.kind == "prefill":
+            qcfg = _quant_for("prefill", preset, serve_kv_bits)
+            params_shapes = jax.eval_shape(
+                lambda k: convert_to_serving(M.init_params(k, cfg, qcfg), qcfg), key)
+            p_specs = shard.param_pspecs(params_shapes, mesh)
+            p_sh = shard.named_tree(p_specs, mesh)
+            batch_shapes = shp.token_specs(cfg, shape)
+            batch_shapes.pop("labels")
+            batch_sh = shard.named_tree(shard.batch_pspecs(batch_shapes, mesh), mesh)
+
+            def prefill_fn(params, batch):
+                logits, (cache, _aux) = M.forward(
+                    params, batch, cfg, qcfg, collect_cache=True,
+                    constrain=constrain, logits_constrain=logits_constrain)
+                # serving returns only the last-position logits + the cache
+                return logits[:, -1], cache
+
+            cache_shapes = jax.eval_shape(
+                lambda: M.init_cache(cfg, qcfg, shape.global_batch, shape.seq_len))
+            cache_sh = shard.named_tree(shard.cache_pspecs(cache_shapes, mesh), mesh)
+            jitted = jax.jit(prefill_fn, in_shardings=(p_sh, batch_sh),
+                             out_shardings=(None, cache_sh))
+            lowered = jitted.lower(params_shapes, batch_shapes)
+            tokens = shape.global_batch * shape.seq_len
+            mf = rl.model_flops_per_step(cfg, tokens, train=False)
+        else:  # decode
+            qcfg = _quant_for("decode", preset, serve_kv_bits)
+            params_shapes = jax.eval_shape(
+                lambda k: convert_to_serving(M.init_params(k, cfg, qcfg), qcfg), key)
+            p_sh = shard.named_tree(shard.param_pspecs(params_shapes, mesh), mesh)
+            cache_shapes = jax.eval_shape(
+                lambda: M.init_cache(cfg, qcfg, shape.global_batch, shape.seq_len))
+            cache_sh = shard.named_tree(shard.cache_pspecs(cache_shapes, mesh), mesh)
+            batch_shapes = shp.decode_token_specs(cfg, shape)
+            batch_sh = shard.named_tree(shard.batch_pspecs(batch_shapes, mesh), mesh)
+
+            def serve_fn(params, cache, batch):
+                return M.decode_step(params, cache, batch, cfg, qcfg,
+                                     constrain=constrain)
+
+            jitted = jax.jit(serve_fn, in_shardings=(p_sh, cache_sh, batch_sh),
+                             out_shardings=(None, cache_sh),
+                             donate_argnums=(1,) if donate else ())
+            lowered = jitted.lower(params_shapes, cache_shapes, batch_shapes)
+            tokens = shape.global_batch  # one token per sequence
+            mf = rl.model_flops_per_step(cfg, tokens, train=False)
+
+        t0 = time.monotonic()
+        compiled = lowered.compile()
+        compile_s = time.monotonic() - t0
+
+        mem = compiled.memory_analysis()
+        hc = hlo_cost.analyze(compiled.as_text())
+        chips = 512 if multi_pod else 256
+        roof = rl.roofline_from_hlo(hc, chips=chips, model_flops=mf)
+
+        mem_out = {}
+        for attr in ("temp_size_in_bytes", "argument_size_in_bytes",
+                     "output_size_in_bytes", "alias_size_in_bytes",
+                     "generated_code_size_in_bytes"):
+            v = getattr(mem, attr, None)
+            if v is not None:
+                mem_out[attr] = int(v)
+        per_device_bytes = (mem_out.get("temp_size_in_bytes", 0)
+                            + mem_out.get("argument_size_in_bytes", 0)
+                            - mem_out.get("alias_size_in_bytes", 0))
+        return {
+            "status": "ok", "compile_s": round(compile_s, 1),
+            "chips": chips, "tokens_per_step": tokens,
+            "memory": mem_out, "per_device_bytes": per_device_bytes,
+            "fits_16g": per_device_bytes < 16 * 1024**3,
+            "collectives": {"bytes_by_op": hc["collective_bytes_by_op"],
+                            "count_by_op": hc["collective_count_by_op"],
+                            "total_bytes": hc["collective_bytes"],
+                            "total_count": hc["collective_count"]},
+            "roofline": roof,
+            "grad_accum": (_train_cfg(cfg, shape, grad_accum, bf16_moments)
+                           .grad_accum if shape.kind == "train" else None),
+        }
+
+
+def run(args):
+    archs = ARCH_IDS if args.arch == "all" else [args.arch]
+    shape_names = list(shp.SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    existing = set()
+    if args.resume and os.path.exists(args.out):
+        with open(args.out) as f:
+            for line in f:
+                try:
+                    rec = json.loads(line)
+                    if rec.get("status") in ("ok", "skipped"):
+                        existing.add((rec["arch"], rec["shape"], rec["multi_pod"],
+                                      rec.get("preset", args.quant)))
+                except json.JSONDecodeError:
+                    pass
+    for arch in archs:
+        for shape_name in shape_names:
+            for multi_pod in meshes:
+                keyt = (arch, shape_name, multi_pod, args.quant)
+                if keyt in existing:
+                    print(f"[skip-done] {keyt}", flush=True)
+                    continue
+                rec = {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+                       "preset": args.quant}
+                print(f"[dryrun] {arch} x {shape_name} x "
+                      f"{'2x16x16' if multi_pod else '16x16'} ...", flush=True)
+                t0 = time.monotonic()
+                try:
+                    rec.update(lower_cell(
+                        arch, shape_name, multi_pod=multi_pod, preset=args.quant,
+                        grad_accum=args.grad_accum, serve_kv_bits=args.kv_bits,
+                        extra_dp=arch in args.extra_dp.split(","),
+                        moe_groups=args.moe_groups,
+                        bf16_moments=args.bf16_moments))
+                except Exception as e:  # record the failure, keep sweeping
+                    rec.update({"status": "error", "error": repr(e),
+                                "traceback": traceback.format_exc()[-4000:]})
+                rec["wall_s"] = round(time.monotonic() - t0, 1)
+                with open(args.out, "a") as f:
+                    f.write(json.dumps(rec) + "\n")
+                print(f"  -> {rec['status']} ({rec['wall_s']}s)", flush=True)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="all", choices=("all", *ARCH_IDS))
+    ap.add_argument("--shape", default="all", choices=("all", *shp.SHAPES))
+    ap.add_argument("--mesh", default="both", choices=("single", "multi", "both"))
+    ap.add_argument("--quant", default="w4a4")
+    ap.add_argument("--kv-bits", type=int, default=8, dest="kv_bits")
+    ap.add_argument("--grad-accum", type=int, default=8, dest="grad_accum")
+    ap.add_argument("--bf16-moments", action="store_true", dest="bf16_moments",
+                    help="store Adam moments in bf16 (update math stays f32)")
+    ap.add_argument("--moe-groups", type=int, default=1, dest="moe_groups",
+                    help="MoE dispatch locality groups (0 = auto: DP degree)")
+    ap.add_argument("--extra-dp", default="", dest="extra_dp",
+                    help="comma list of archs to run with model-axis-as-DP")
+    ap.add_argument("--out", default="dryrun_results.jsonl")
+    ap.add_argument("--resume", action="store_true", default=True)
+    run(ap.parse_args())
+
+
+if __name__ == "__main__":
+    main()

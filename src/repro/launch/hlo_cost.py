@@ -1,0 +1,500 @@
+"""Loop-aware HLO cost analysis.
+
+XLA's built-in `compiled.cost_analysis()` counts each while-loop body ONCE —
+under our scan-over-layers / grad-accumulation / chunked-attention structure
+that understates FLOPs and bytes by orders of magnitude. This module parses
+the post-optimization, post-SPMD HLO text (a per-device program), walks the
+call graph, and multiplies every computation's cost by the product of
+enclosing `known_trip_count` annotations.
+
+Accounting policy (documented upper-bound flavor):
+  * FLOPs: dot ops only (2 * prod(output dims) * prod(lhs contracting dims)),
+    plus convolutions treated as dots. Elementwise FLOPs are ignored — they
+    are bandwidth-, not compute-, bound and never bind the compute term.
+  * HBM bytes: per top-level op, output bytes + named-operand bytes.
+    Fusions count only their boundary (operands + outputs) — interiors live
+    in registers/VMEM. dynamic-update-slice counts 2x the update slice
+    (aliased in-place write), dynamic-slice 2x the output.
+    tuple/GTE/bitcast/parameter/constant are free.
+  * Collectives: output bytes per op kind x trip multiplier (per-device
+    program => per-device communication volume; all-gather outputs
+    overstate on-wire by n/(n-1), all-reduce by ~2x ring factor — a
+    documented <=2x proxy).
+"""
+from __future__ import annotations
+
+import json
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "c64": 8, "c128": 16,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s8": 1, "u8": 1, "pred": 1,
+    "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_CALL_RE = re.compile(r"(?:body|condition|to_apply|calls)=%?([\w\.\-]+)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_LHS_CDIMS_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                  "collective-permute", "ragged-all-to-all")
+
+_FREE_OPS = {"parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+             "after-all", "add-dependency", "copy-done", "partition-id",
+             "replica-id", "opt-barrier", "custom-call"}
+
+
+def _shape_dims(s: str):
+    return [int(d) for d in s.split(",") if d]
+
+
+def _shapes_bytes(text: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in _shape_dims(dims):
+            n *= d
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _split_type(rhs: str):
+    """Split '<type> <opcode>(<operands>), <attrs>' -> (type, rest)."""
+    if rhs.startswith("("):
+        depth = 0
+        for i, ch in enumerate(rhs):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    return rhs[: i + 1], rhs[i + 1:].strip()
+        return rhs, ""
+    m = re.match(r"\S+", rhs)
+    return m.group(0), rhs[m.end():].strip()
+
+
+def _operands_span(rest: str):
+    """The text inside the opcode's balanced operand parens."""
+    start = rest.find("(")
+    if start < 0:
+        return "", rest
+    depth = 0
+    for i in range(start, len(rest)):
+        if rest[i] == "(":
+            depth += 1
+        elif rest[i] == ")":
+            depth -= 1
+            if depth == 0:
+                return rest[start + 1: i], rest[i + 1:]
+    return rest[start + 1:], ""
+
+
+_OPERAND_NAME_RE = re.compile(r"%([\w\.\-]+)")
+
+
+def _fusion_boundary_bytes(comp_lines, symtab, operand_entries, out_bytes):
+    """Effective HBM boundary bytes of one fusion execution.
+
+    Loop bodies consume scan-carried stacked buffers (e.g. the 36-layer
+    saved-residual stack) through fused dynamic-slice / dynamic-update-slice
+    ops; charging those parameters at full size per iteration overstates
+    traffic by the trip count. Parameters consumed ONLY via dynamic-slice
+    count at slice size x2; DUS targets count at update size x2 (in-place);
+    everything else counts fully. An output aliased to a DUS target is not
+    charged again.
+    """
+    param_bytes: dict[str, int] = {}
+    param_order: list[str] = []
+    sliced_only: dict[str, bool] = {}
+    dus_targets: set[str] = set()
+    alias: dict[str, str] = {}
+    ds_bytes = 0.0
+    max_dus_target = 0
+
+    def root_of(nm: str) -> str:
+        seen = set()
+        while nm in alias and nm not in seen:
+            seen.add(nm)
+            nm = alias[nm]
+        return nm
+
+    for line in comp_lines:
+        body = line.split(" = ", 1)
+        if len(body) != 2:
+            continue
+        name_m = re.match(r"(?:ROOT\s+)?%?([\w\.\-]+)\s+=", line.strip())
+        op_name = name_m.group(1) if name_m else ""
+        type_str, rest = _split_type(body[1])
+        op_m = re.match(r"([\w\-]+)", rest)
+        if not op_m:
+            continue
+        opcode = op_m.group(1)
+        operands_txt, _ = _operands_span(rest)
+        o_names = _OPERAND_NAME_RE.findall(operands_txt)
+        if opcode == "parameter":
+            param_bytes[op_name] = _shapes_bytes(type_str)
+            param_order.append(op_name)
+            sliced_only[op_name] = True
+            continue
+        if opcode in ("convert", "bitcast", "copy", "reshape") and len(o_names) == 1:
+            # dtype/layout views: same logical buffer (TPU lowers these
+            # in-lane; CPU's whole-buffer converts around a DUS are a
+            # lowering artifact we deliberately do not charge)
+            alias[op_name] = o_names[0]
+            continue
+        if opcode == "dynamic-slice":
+            ds_bytes += 2 * _shapes_bytes(type_str)
+            continue
+        if opcode == "dynamic-update-slice":
+            if o_names:
+                tgt = root_of(o_names[0])
+                dus_targets.add(tgt)
+                alias[op_name] = tgt  # DUS output aliases its target
+                max_dus_target = max(max_dus_target,
+                                     _shapes_bytes(symtab.get(tgt, ""))
+                                     or _shapes_bytes(type_str))
+            if len(o_names) > 1:
+                upd_root = root_of(o_names[1])
+                upd = symtab.get(upd_root, "") or symtab.get(o_names[1], "")
+                ds_bytes += 2 * _shapes_bytes(upd)
+            continue
+        # any other consumer of a parameter makes it a full-size read
+        for nm in o_names:
+            rt = root_of(nm)
+            if rt in sliced_only:
+                sliced_only[rt] = False
+    total = ds_bytes
+    for nm in param_order:
+        if nm in dus_targets:
+            continue  # in-place alias: charged at update size above
+        if not sliced_only.get(nm, False):
+            total += param_bytes.get(nm, 0)
+    # output aliased to a DUS target (possibly through a ROOT convert/copy)
+    dus_out = max_dus_target > 0 and out_bytes >= max_dus_target
+    if not dus_out:
+        total += out_bytes
+    return total
+
+
+class HloCost:
+    def __init__(self):
+        self.flops = 0.0
+        self.bytes = 0.0
+        self.coll_bytes = defaultdict(float)
+        self.coll_count = defaultdict(float)
+
+    def add(self, other: "HloCost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        for k, v in other.coll_bytes.items():
+            self.coll_bytes[k] += v * mult
+        for k, v in other.coll_count.items():
+            self.coll_count[k] += v * mult
+
+    def as_dict(self) -> dict:
+        return {"flops": self.flops, "bytes": self.bytes,
+                "collective_bytes_by_op": dict(self.coll_bytes),
+                "collective_count_by_op": dict(self.coll_count),
+                "collective_bytes": sum(self.coll_bytes.values()),
+                "collective_count": sum(self.coll_count.values())}
+
+
+def _header_symbols(header: str) -> dict:
+    """Parse 'name: type' pairs from a computation header's param list."""
+    start = header.find("(")
+    if start < 0:
+        return {}
+    depth = 0
+    end = start
+    for i in range(start, len(header)):
+        if header[i] == "(":
+            depth += 1
+        elif header[i] == ")":
+            depth -= 1
+            if depth == 0:
+                end = i
+                break
+    inner = header[start + 1:end]
+    syms = {}
+    # split top-level commas
+    depth = 0
+    tok = []
+    parts = []
+    for ch in inner:
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        if ch == "," and depth == 0:
+            parts.append("".join(tok))
+            tok = []
+        else:
+            tok.append(ch)
+    if tok:
+        parts.append("".join(tok))
+    for part in parts:
+        if ":" in part:
+            nm, ty = part.split(":", 1)
+            syms[nm.strip().lstrip("%")] = ty.strip()
+    return syms
+
+
+def split_computations(text: str):
+    comps: dict[str, list[str]] = {}
+    symtabs: dict[str, dict] = {}
+    entry = None
+    cur = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        stripped = line.strip()
+        if not stripped:
+            continue
+        if (line.startswith("%") or line.startswith("ENTRY")) and stripped.endswith("{"):
+            m = re.match(r"(?:ENTRY\s+)?%?([\w\.\-]+)", stripped)
+            cur = m.group(1)
+            comps[cur] = []
+            symtabs[cur] = _header_symbols(stripped)
+            if line.startswith("ENTRY"):
+                entry = cur
+        elif stripped == "}" or line.startswith("}"):
+            cur = None
+        elif cur is not None and " = " in stripped:
+            comps[cur].append(stripped)
+            nm = re.match(r"(?:ROOT\s+)?%?([\w\.\-]+)\s+=\s+", stripped)
+            if nm:
+                rhs = stripped.split(" = ", 1)[1]
+                ty, _ = _split_type(rhs)
+                symtabs[cur][nm.group(1)] = ty
+    return comps, symtabs, entry
+
+
+def _operand_entries(operands_txt: str, symtab: dict) -> list[str]:
+    """Type strings for each top-level operand (inline type or symbol)."""
+    depth = 0
+    tok: list[str] = []
+    parts: list[str] = []
+    for ch in operands_txt:
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        if ch == "," and depth == 0:
+            parts.append("".join(tok))
+            tok = []
+        else:
+            tok.append(ch)
+    if tok:
+        parts.append("".join(tok))
+    out = []
+    for part in parts:
+        part = part.strip()
+        if not part:
+            continue
+        if "[" in part and "%" in part:
+            # inline "dtype[shape]{layout} %name"
+            out.append(part.rsplit("%", 1)[0].strip())
+        elif part.startswith("%"):
+            out.append(symtab.get(part.lstrip("%"), ""))
+        elif "[" in part:
+            out.append(part)
+        else:
+            out.append(symtab.get(part.lstrip("%"), ""))
+    return out
+
+
+def analyze(text: str) -> dict:
+    comps, symtabs, entry = split_computations(text)
+    memo: dict[str, HloCost] = {}
+
+    def comp_cost(name: str) -> HloCost:
+        if name in memo:
+            return memo[name]
+        memo[name] = HloCost()  # cycle guard (shouldn't happen)
+        total = HloCost()
+        symtab = symtabs.get(name, {})
+        for line in comps.get(name, []):
+            total.add(op_cost(line, symtab))
+        memo[name] = total
+        return total
+
+    def op_cost(line: str, symtab: dict) -> HloCost:
+        c = HloCost()
+        body = line.split(" = ", 1)
+        if len(body) != 2:
+            return c
+        type_str, rest = _split_type(body[1])
+        m = re.match(r"([\w\-]+)", rest)
+        if not m:
+            return c
+        opcode = m.group(1)
+        operands_txt, attrs = _operands_span(rest)
+        out_bytes = _shapes_bytes(type_str)
+
+        if opcode == "while":
+            trip = 1.0
+            tm = _TRIP_RE.search(attrs)
+            if tm:
+                trip = float(tm.group(1))
+            calls = _CALL_RE.findall(rest)
+            for cname in calls:
+                # body and condition both execute `trip` times
+                c.add(comp_cost(cname), trip)
+            return c
+        if opcode == "conditional":
+            bm = _BRANCH_RE.search(attrs)
+            if bm:
+                branches = [b.strip().lstrip("%") for b in bm.group(1).split(",")]
+                costs = [comp_cost(b) for b in branches if b in comps]
+                if costs:
+                    worst = max(costs, key=lambda x: x.flops + x.bytes)
+                    c.add(worst)
+            return c
+        if opcode == "fusion":
+            # interior lives in registers: boundary bytes + interior FLOPs;
+            # scan-carried buffers consumed via fused dynamic-slice/DUS are
+            # charged at slice size (see _fusion_boundary_bytes)
+            fusion_comps = _CALL_RE.findall(attrs)
+            for cname in fusion_comps:
+                inner = comp_cost(cname)
+                c.flops += inner.flops
+                for k, v in inner.coll_bytes.items():
+                    c.coll_bytes[k] += v
+                for k, v in inner.coll_count.items():
+                    c.coll_count[k] += v
+            if fusion_comps and fusion_comps[0] in comps:
+                fc = fusion_comps[0]
+                c.bytes += _fusion_boundary_bytes(
+                    comps[fc], symtabs.get(fc, {}),
+                    _operand_entries(operands_txt, symtab), out_bytes)
+            else:
+                c.bytes += out_bytes + sum(
+                    _shapes_bytes(t) for t in _operand_entries(operands_txt, symtab))
+            return c
+        if opcode == "call":
+            for cname in _CALL_RE.findall(attrs):
+                c.add(comp_cost(cname))
+            return c
+
+        base = opcode.replace("-start", "")
+        if base in COLLECTIVE_OPS and not opcode.endswith("-done"):
+            c.coll_bytes[base] += out_bytes
+            c.coll_count[base] += 1
+            c.bytes += out_bytes + sum(
+                _shapes_bytes(t) for t in _operand_entries(operands_txt, symtab))
+            return c
+
+        if opcode in _FREE_OPS or opcode.endswith("-done"):
+            return c
+
+        if opcode in ("dot", "convolution"):
+            entries = _operand_entries(operands_txt, symtab)
+            cdims = []
+            cm = _LHS_CDIMS_RE.search(attrs)
+            if cm:
+                cdims = _shape_dims(cm.group(1))
+            k = 1
+            if entries:
+                lhs = _SHAPE_RE.findall(entries[0])
+                if lhs:
+                    lhs_dims = _shape_dims(lhs[0][1])
+                    for cd in cdims:
+                        if cd < len(lhs_dims):
+                            k *= lhs_dims[cd]
+            out_elems = 1
+            for dtype, dims in _SHAPE_RE.findall(type_str):
+                for d in _shape_dims(dims):
+                    out_elems *= d
+                break
+            c.flops += 2.0 * out_elems * k
+            c.bytes += out_bytes + sum(_shapes_bytes(t) for t in entries)
+            return c
+
+        if opcode == "dynamic-update-slice":
+            entries = _operand_entries(operands_txt, symtab)
+            upd = _shapes_bytes(entries[1]) if len(entries) >= 2 else 0
+            c.bytes += 2 * upd
+            return c
+        if opcode == "dynamic-slice":
+            c.bytes += 2 * out_bytes
+            return c
+
+        c.bytes += out_bytes + sum(
+            _shapes_bytes(t) for t in _operand_entries(operands_txt, symtab))
+        return c
+
+    if entry is None:
+        raise ValueError("no ENTRY computation found in HLO text")
+    total = comp_cost(entry)
+    return total.as_dict()
+
+
+def analyze_by_opcode(text: str, top_lines: int = 12) -> dict:
+    """Attribution variant: bytes per opcode + the heaviest individual op
+    lines (bytes x trip multiplier). Used by the perf-iteration loop to
+    find what dominates the memory term."""
+    comps, symtabs, entry = split_computations(text)
+    by_op = defaultdict(float)
+    heavy: list[tuple[float, str]] = []
+
+    def comp_walk(name: str, mult: float):
+        symtab = symtabs.get(name, {})
+        for line in comps.get(name, []):
+            body = line.split(" = ", 1)
+            if len(body) != 2:
+                continue
+            type_str, rest = _split_type(body[1])
+            m = re.match(r"([\w\-]+)", rest)
+            if not m:
+                continue
+            opcode = m.group(1)
+            operands_txt, attrs = _operands_span(rest)
+            out_bytes = _shapes_bytes(type_str)
+            if opcode == "while":
+                trip = 1.0
+                tm = _TRIP_RE.search(attrs)
+                if tm:
+                    trip = float(tm.group(1))
+                for cname in _CALL_RE.findall(rest):
+                    comp_walk(cname, mult * trip)
+                continue
+            if opcode == "call":
+                for cname in _CALL_RE.findall(attrs):
+                    comp_walk(cname, mult)
+                continue
+            if opcode in _FREE_OPS or opcode.endswith("-done"):
+                continue
+            if opcode == "dynamic-update-slice":
+                entries = _operand_entries(operands_txt, symtab)
+                b = 2 * (_shapes_bytes(entries[1]) if len(entries) >= 2 else 0)
+            elif opcode == "dynamic-slice":
+                b = 2 * out_bytes
+            elif opcode == "fusion":
+                fusion_comps = _CALL_RE.findall(attrs)
+                if fusion_comps and fusion_comps[0] in comps:
+                    fc = fusion_comps[0]
+                    b = _fusion_boundary_bytes(
+                        comps[fc], symtabs.get(fc, {}),
+                        _operand_entries(operands_txt, symtab), out_bytes)
+                else:
+                    b = out_bytes + sum(
+                        _shapes_bytes(t)
+                        for t in _operand_entries(operands_txt, symtab))
+            else:
+                b = out_bytes + sum(
+                    _shapes_bytes(t)
+                    for t in _operand_entries(operands_txt, symtab))
+            by_op[opcode] += b * mult
+            heavy.append((b * mult, line[:180]))
+
+    comp_walk(entry, 1.0)
+    heavy.sort(key=lambda t: -t[0])
+    return {"bytes_by_opcode": dict(sorted(by_op.items(), key=lambda kv: -kv[1])),
+            "heaviest": heavy[:top_lines]}

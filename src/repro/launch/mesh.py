@@ -1,0 +1,32 @@
+"""Production mesh definitions.
+
+make_production_mesh is a FUNCTION (importing this module never touches jax
+device state). Dry-run callers set XLA_FLAGS host-device-count before any
+jax import; real launches get the same meshes over real TPU slices.
+
+Axes:
+  pod   — data parallelism across pods (DCN); gradient all-reduce only
+  data  — data parallelism within a pod (ICI)
+  model — tensor/expert parallelism (heads / d_ff / vocab / experts)
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: int = 1):
+    """Small mesh over whatever devices exist (tests / examples)."""
+    n = len(jax.devices())
+    model = max(1, min(model, n))
+    data = n // model
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def batch_axes(mesh) -> tuple:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

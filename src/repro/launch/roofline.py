@@ -1,0 +1,105 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Terms (seconds, per step, per chip — HLO post-SPMD is a per-device program,
+so cost_analysis FLOPs/bytes and parsed collective shapes are already
+per-device):
+
+  compute    = HLO_FLOPs / peak_FLOPs            (197 TFLOP/s bf16, v5e)
+  memory     = HLO_bytes / HBM_bw                (819 GB/s)
+  collective = collective_bytes / link_bw        (~50 GB/s/link ICI;
+               output bytes of each collective op — a ~1-2x proxy for
+               on-wire volume depending on algorithm, documented)
+
+MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE) per step; the ratio
+MODEL_FLOPS / (HLO_FLOPs * chips) exposes remat/redundancy waste.
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional
+
+from repro.configs.base import ArchConfig
+
+PEAK_FLOPS = 197e12        # bf16 per chip
+HBM_BW = 819e9             # bytes/s per chip
+LINK_BW = 50e9             # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "c64": 8,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s8": 1, "u8": 1, "pred": 1,
+}
+
+COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                  "collective-permute", "ragged-all-to-all")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Sum per-op-kind output bytes of every collective in (per-device) HLO."""
+    totals = {op: 0 for op in COLLECTIVE_OPS}
+    counts = {op: 0 for op in COLLECTIVE_OPS}
+    for line in hlo_text.splitlines():
+        for op in COLLECTIVE_OPS:
+            # match " op(" and async " op-start(" but not "-done("
+            if f" {op}(" in line or f" {op}-start(" in line:
+                lhs = line.split(f" {op}", 1)[0]
+                nbytes = sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(lhs))
+                totals[op] += nbytes
+                counts[op] += 1
+                break
+    totals = {k: v for k, v in totals.items() if counts[k]}
+    counts = {k: v for k, v in counts.items() if v}
+    return {"bytes_by_op": totals, "count_by_op": counts,
+            "total_bytes": sum(totals.values()),
+            "total_count": sum(counts.values())}
+
+
+def model_flops_per_step(cfg: ArchConfig, tokens: int, *, train: bool) -> float:
+    """6*N*D (training) / 2*N*D (inference fwd) with N = active params."""
+    n_active = cfg.param_count(active_only=True)
+    mult = 6.0 if train else 2.0
+    return mult * n_active * tokens
+
+
+def roofline_from_hlo(hc: dict, *, chips: int,
+                      model_flops: Optional[float] = None) -> dict:
+    """Terms from a launch.hlo_cost.analyze() result (loop-aware)."""
+    return roofline(hc["flops"], hc["bytes"], hc["collective_bytes"],
+                    chips=chips, model_flops=model_flops)
+
+
+def roofline(flops: float, bytes_acc: float, coll_bytes: float, *, chips: int,
+             model_flops: Optional[float] = None) -> dict:
+    compute_s = flops / PEAK_FLOPS
+    memory_s = bytes_acc / HBM_BW
+    coll_s = coll_bytes / LINK_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": coll_s}
+    dominant = max(terms, key=terms.get)
+    bound_s = max(compute_s, memory_s, coll_s)
+    out = {
+        **terms,
+        "dominant": dominant,
+        "hlo_flops_per_chip": flops,
+        "hlo_bytes_per_chip": bytes_acc,
+        "collective_bytes_per_chip": coll_bytes,
+        "chips": chips,
+    }
+    if model_flops:
+        out["model_flops"] = model_flops
+        out["useful_flops_ratio"] = model_flops / max(flops * chips, 1.0)
+        # roofline fraction: useful-FLOPs time vs. the binding term
+        ideal_s = model_flops / (chips * PEAK_FLOPS)
+        out["roofline_fraction"] = ideal_s / max(bound_s, 1e-30)
+    return out

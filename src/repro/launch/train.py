@@ -1,0 +1,125 @@
+"""Production training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch granite-8b --smoke \
+        --quant w4a4 --steps 100 --ckpt /tmp/run1
+
+Builds a mesh over the available devices (data x model), shards the train
+state with the production rules (FSDP + TP + per-head scale sharding), and
+runs the QAT loop with MCKD labels, async checkpointing, preemption
+handling, and straggler telemetry. On a real TPU slice the same entrypoint
+runs unmodified (jax.distributed.initialize is attempted when the
+JAX_COORDINATOR_ADDRESS env var is present); on this CPU container use
+--smoke for reduced configs.
+
+XLA flags for real runs (latency-hiding collective overlap) are appended via
+LIBTPU_INIT_ARGS / XLA_FLAGS when --tpu-flags is passed.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+import jax
+
+from repro.configs.registry import ARCH_IDS, get_config, reduced_config
+from repro.core.policy import get_preset
+from repro.data.mckd_store import synthetic_kd_labels
+from repro.data.synthetic import DataConfig, sample_batch
+from repro.dist import sharding as shard
+from repro.launch.mesh import make_host_mesh
+from repro.optim.adamw import AdamWConfig
+from repro.train.fault_tolerance import CheckpointManager
+from repro.train.state import TrainConfig, init_state
+from repro.train.train_step import make_train_step
+
+TPU_PERF_FLAGS = ("--xla_enable_async_all_gather=true "
+                  "--xla_enable_async_collective_permute=true "
+                  "--xla_tpu_enable_async_collective_fusion=true")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-8b", choices=ARCH_IDS)
+    ap.add_argument("--quant", default="w4a4")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-sized)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--grad-accum", type=int, default=1, dest="grad_accum")
+    ap.add_argument("--model-parallel", type=int, default=1, dest="mp")
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--kd", default="mckd", choices=("none", "mckd"))
+    ap.add_argument("--compress-grads", action="store_true", dest="compress")
+    ap.add_argument("--ckpt", default="")
+    ap.add_argument("--save-every", type=int, default=100, dest="save_every")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--tpu-flags", action="store_true", dest="tpu_flags")
+    args = ap.parse_args()
+
+    if args.tpu_flags:
+        os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") + " "
+                                   + TPU_PERF_FLAGS)
+    if "JAX_COORDINATOR_ADDRESS" in os.environ:  # multi-host slice
+        jax.distributed.initialize()
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = reduced_config(cfg)
+    qcfg = get_preset(args.quant)
+    tcfg = TrainConfig(total_steps=args.steps,
+                       warmup_steps=max(args.steps // 20, 2),
+                       grad_accum=args.grad_accum, kd=args.kd, kd_topk=16,
+                       compress_grads=args.compress,
+                       adamw=AdamWConfig(lr_peak=args.lr))
+    dcfg = DataConfig(seed=args.seed)
+    mesh = make_host_mesh(model=args.mp)
+    print(f"mesh={dict(mesh.shape)} arch={cfg.name} quant={args.quant} "
+          f"kd={args.kd} accum={args.grad_accum}")
+
+    key = jax.random.PRNGKey(args.seed)
+    constrain, logits_constrain = shard.make_constrains(mesh)
+    like = jax.eval_shape(lambda k: init_state(k, cfg, qcfg, tcfg), key)
+    state_sh = shard.named_tree(shard.state_pspecs(like, mesh, qcfg), mesh)
+
+    mgr = CheckpointManager(args.ckpt or f"/tmp/ckpt-{cfg.name}",
+                            save_every=args.save_every)
+    state, start = mgr.restore_or_init(
+        lambda: jax.jit(lambda k: init_state(k, cfg, qcfg, tcfg),
+                        out_shardings=state_sh)(key),
+        like, shardings=state_sh)
+    if start:
+        print(f"restored from step {start} (elastic reshard onto "
+              f"{len(jax.devices())} devices)")
+
+    step = jax.jit(make_train_step(cfg, qcfg, tcfg, constrain=constrain,
+                                   logits_constrain=logits_constrain),
+                   in_shardings=(state_sh, None), out_shardings=(state_sh, None),
+                   donate_argnums=0)
+    host = jax.process_index()
+    t0 = time.monotonic()
+    for i in range(start, args.steps):
+        batch = sample_batch(cfg, dcfg, i, args.batch, args.seq, host_index=host)
+        if args.kd == "mckd":
+            idx, p = synthetic_kd_labels(batch["labels"], cfg.vocab_size, 16,
+                                         seed=i)
+            batch.update(kd_idx=idx, kd_p=p)
+        state, m = step(state, batch)
+        slow = mgr.straggler.tick()
+        if i % 10 == 0:
+            dt = (time.monotonic() - t0) / max(i - start + 1, 1)
+            print(f"step {i:5d} loss={float(m['loss']):.4f} "
+                  f"lr={float(m['lr']):.2e} {dt:.2f}s/step"
+                  f"{' STRAGGLER' if slow else ''}", flush=True)
+        mgr.maybe_save(state, i)
+        if mgr.should_stop():
+            print("preemption: final checkpoint + clean exit")
+            mgr.maybe_save(state, i, force=True)
+            break
+    mgr.finalize()
+    print("done.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,245 @@
+"""Attention: chunked-softmax training/prefill path + cached decode path.
+
+Design notes (TPU adaptation, DESIGN.md Sec. 3):
+  * Training/prefill never materializes the full (S x S) score matrix: a
+    lax.scan over query chunks bounds live memory at (chunk_q x kv_span).
+    Local (sliding-window) layers restrict the kv span to window+chunk_q.
+  * GQA is expressed by repeating KV heads (jnp.repeat of a replicated or
+    kv-sharded tensor); XLA SPMD slices the repeat to the local q-heads so
+    no extra HBM is spent when q-heads are model-sharded.
+  * Decode supports an optional int8/int4 quantized KV cache with per
+    (batch, position, head) dynamic scales — the paper's per-head (module)
+    granularity argument applied to inference state (beyond-paper).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import QuantConfig, kv_cache_spec
+from repro.models.common import rope as rope_apply  # noqa: F401 (re-export)
+
+NEG_INF = -2.0e9  # mask value kept finite to avoid NaN in padded softmax rows
+
+
+def _softcap(scores: jax.Array, cap: float) -> jax.Array:
+    if cap > 0.0:
+        return cap * jnp.tanh(scores / cap)
+    return scores
+
+
+def repeat_kv(k: jax.Array, q_per_kv: int) -> jax.Array:
+    """(B, T, Hkv, D) -> (B, T, H, D)."""
+    if q_per_kv == 1:
+        return k
+    return jnp.repeat(k, q_per_kv, axis=2)
+
+
+def attend_full(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                causal: bool, window: int, softcap: float,
+                q_positions: jax.Array, k_positions: jax.Array,
+                chunk_q: int = 512) -> jax.Array:
+    """Chunked softmax attention.
+
+    q: (B, Sq, H, D); k, v: (B, Sk, H, D) (kv already head-repeated).
+    q_positions: (Sq,), k_positions: (Sk,) absolute positions for masking.
+    window > 0 limits attention to k_pos in (q_pos - window, q_pos].
+    """
+    b, sq, h, d = q.shape
+    scale = d ** -0.5
+    nq = max(1, min(chunk_q, sq))
+    while sq % nq:
+        nq //= 2
+    n_chunks = sq // nq
+
+    qc = q.reshape(b, n_chunks, nq, h, d).transpose(1, 0, 3, 2, 4)  # (C,B,H,nq,D)
+    qp = q_positions.reshape(n_chunks, nq)
+    kt = k.transpose(0, 2, 3, 1)  # (B,H,D,Sk)
+    vt = v.transpose(0, 2, 1, 3)  # (B,H,Sk,D)
+
+    def one_chunk(carry, inp):
+        qi, qpos = inp  # (B,H,nq,D), (nq,)
+        s = jnp.einsum("bhqd,bhdk->bhqk",
+                       (qi.astype(jnp.float32) * scale).astype(qi.dtype), kt,
+                       preferred_element_type=jnp.float32)
+        s = _softcap(s, softcap)
+        mask = jnp.ones((nq, k_positions.shape[0]), bool)
+        if causal:
+            mask &= k_positions[None, :] <= qpos[:, None]
+        if window > 0:
+            mask &= k_positions[None, :] > (qpos[:, None] - window)
+        s = jnp.where(mask[None, None], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhqk,bhkd->bhqd", p.astype(v.dtype), vt)
+        return carry, o
+
+    _, out = jax.lax.scan(one_chunk, None, (qc, qp))
+    # (C,B,H,nq,D) -> (B, Sq, H, D)
+    out = out.transpose(1, 0, 3, 2, 4).reshape(b, sq, h, d)
+    return out
+
+
+def attend_local_chunked(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                         window: int, softcap: float,
+                         chunk_q: int = 512) -> jax.Array:
+    """Sliding-window causal attention with kv-span slicing.
+
+    Prefill-only fast path: positions are 0..S-1 on both sides. Each query
+    chunk attends to a [chunk_start - window, chunk_end) slice, so compute
+    and memory are O(S * (window + chunk)) instead of O(S^2).
+    """
+    b, s, h, d = q.shape
+    scale = d ** -0.5
+    nq = max(1, min(chunk_q, s))
+    while s % nq:
+        nq //= 2
+    n_chunks = s // nq
+    span = min(s, window + nq)
+
+    qc = q.reshape(b, n_chunks, nq, h, d).transpose(1, 0, 3, 2, 4)
+    kp = k.transpose(0, 2, 1, 3)  # (B,H,Sk,D)
+    vp = v.transpose(0, 2, 1, 3)
+
+    def one_chunk(carry, ci):
+        qi = qc[ci]  # (B,H,nq,D) -- gathered via dynamic index on stacked qc
+        start = jnp.maximum(ci * nq + nq - span, 0)
+        start = jnp.minimum(start, s - span)
+        ks = jax.lax.dynamic_slice_in_dim(kp, start, span, axis=2)
+        vs = jax.lax.dynamic_slice_in_dim(vp, start, span, axis=2)
+        sc = jnp.einsum("bhqd,bhkd->bhqk",
+                        (qi.astype(jnp.float32) * scale).astype(qi.dtype), ks,
+                        preferred_element_type=jnp.float32)
+        sc = _softcap(sc, softcap)
+        qpos = ci * nq + jnp.arange(nq)
+        kpos = start + jnp.arange(span)
+        mask = (kpos[None, :] <= qpos[:, None]) & (kpos[None, :] > qpos[:, None] - window)
+        sc = jnp.where(mask[None, None], sc, NEG_INF)
+        p = jax.nn.softmax(sc, axis=-1)
+        o = jnp.einsum("bhqk,bhkd->bhqd", p.astype(v.dtype), vs)
+        return carry, o
+
+    _, out = jax.lax.scan(one_chunk, None, jnp.arange(n_chunks))
+    return out.transpose(1, 0, 3, 2, 4).reshape(b, s, h, d)
+
+
+# ---------------------------------------------------------------------------
+# KV cache (decode), optional int-quantized storage
+# ---------------------------------------------------------------------------
+
+class KVCache(NamedTuple):
+    """Either fp (k, v) or quantized (k/v codes + per-(b,t,h) scales)."""
+    k: jax.Array               # fp (B,T,Hkv,D) or int8 codes
+    v: jax.Array
+    k_scale: Optional[jax.Array]  # (B,T,Hkv,1) or None for fp cache
+    v_scale: Optional[jax.Array]
+    pos: jax.Array             # (B,) slot positions stored (for masking)
+
+
+def init_kv_cache(qcfg: QuantConfig, batch: int, max_len: int, n_kv: int,
+                  head_dim: int, cdtype=jnp.bfloat16) -> KVCache:
+    spec = kv_cache_spec(qcfg)
+    if spec is None:
+        z = jnp.zeros((batch, max_len, n_kv, head_dim), cdtype)
+        return KVCache(z, z, None, None,
+                       jnp.full((batch, max_len), -1, jnp.int32))
+    zc = jnp.zeros((batch, max_len, n_kv, head_dim), jnp.int8)
+    zs = jnp.zeros((batch, max_len, n_kv, 1), jnp.float32)
+    return KVCache(zc, zc, zs, zs, jnp.full((batch, max_len), -1, jnp.int32))
+
+
+def _quantize_kv(x: jax.Array, spec) -> tuple[jax.Array, jax.Array]:
+    """Dynamic per-(batch, token, head) symmetric quantization."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax / spec.q_p, 1e-9)
+    codes = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -spec.q_n, spec.q_p)
+    return codes.astype(jnp.int8), scale
+
+
+def cache_append(cache: KVCache, k_new: jax.Array, v_new: jax.Array,
+                 pos: jax.Array, qcfg: QuantConfig, *,
+                 ring: bool = False, window: int = 0) -> KVCache:
+    """Write one token per batch row at `pos` (ring-buffered for local attn).
+
+    k_new/v_new: (B, 1, Hkv, D); pos: (B,) absolute positions.
+    """
+    spec = kv_cache_spec(qcfg)
+    slot = pos % cache.k.shape[1] if ring else pos
+    bidx = jnp.arange(k_new.shape[0])
+    if spec is None:
+        k = cache.k.at[bidx, slot].set(k_new[:, 0].astype(cache.k.dtype))
+        v = cache.v.at[bidx, slot].set(v_new[:, 0].astype(cache.v.dtype))
+        return KVCache(k, v, None, None, cache.pos.at[bidx, slot].set(pos))
+    kc, ks = _quantize_kv(k_new[:, 0], spec)
+    vc, vs = _quantize_kv(v_new[:, 0], spec)
+    return KVCache(
+        cache.k.at[bidx, slot].set(kc),
+        cache.v.at[bidx, slot].set(vc),
+        cache.k_scale.at[bidx, slot].set(ks),
+        cache.v_scale.at[bidx, slot].set(vs),
+        cache.pos.at[bidx, slot].set(pos),
+    )
+
+
+def cache_kv(cache: KVCache, qcfg: QuantConfig, cdtype=jnp.bfloat16):
+    """Dequantized (k, v) views of the cache."""
+    spec = kv_cache_spec(qcfg)
+    if spec is None:
+        return cache.k.astype(cdtype), cache.v.astype(cdtype)
+    k = (cache.k.astype(jnp.float32) * cache.k_scale).astype(cdtype)
+    v = (cache.v.astype(jnp.float32) * cache.v_scale).astype(cdtype)
+    return k, v
+
+
+def attend_decode(q: jax.Array, cache: KVCache, qcfg: QuantConfig, *,
+                  q_per_kv: int, pos: jax.Array, window: int,
+                  softcap: float) -> jax.Array:
+    """One-token attention against the cache.
+
+    q: (B, 1, H, D); pos: (B,) current absolute positions.
+    Valid slots: cache.pos in [max(0, pos-window+1) .. pos] (window=0 => all
+    up to pos).
+    """
+    b, _, h, d = q.shape
+    k, v = cache_kv(cache, qcfg, q.dtype)
+    k = repeat_kv(k, q_per_kv)
+    v = repeat_kv(v, q_per_kv)
+    s = jnp.einsum("bqhd,bthd->bhqt",
+                   (q.astype(jnp.float32) * d ** -0.5).astype(q.dtype), k,
+                   preferred_element_type=jnp.float32)
+    s = _softcap(s, softcap)
+    valid = (cache.pos >= 0) & (cache.pos <= pos[:, None])
+    if window > 0:
+        valid &= cache.pos > (pos[:, None] - window)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqt,bthd->bqhd", p.astype(v.dtype), v)
+
+
+def cache_from_prefill(k: jax.Array, v: jax.Array, positions: jax.Array,
+                       qcfg: QuantConfig, eff_len: int, *, ring: bool,
+                       window: int) -> KVCache:
+    """Build a decode cache from full-prefill K/V (already roped).
+
+    k, v: (B, S, Hkv, D); positions: (S,). Global layers keep all S entries;
+    local (ring) layers keep the last eff_len = min(window, S), placed at
+    slot = pos % eff_len so cache_append continues the same ring.
+    """
+    b, s, hkv, d = k.shape
+    spec = kv_cache_spec(qcfg)
+    if ring:
+        ks_, vs_ = k[:, s - eff_len:], v[:, s - eff_len:]
+        ps = positions[s - eff_len:]
+        slots = ps % eff_len
+        order = jnp.argsort(slots)
+        ks_, vs_ = ks_[:, order], vs_[:, order]
+        pos_arr = jnp.broadcast_to(ps[order][None], (b, eff_len))
+    else:
+        ks_, vs_ = k, v
+        pos_arr = jnp.broadcast_to(positions[None], (b, s))
+    if spec is None:
+        return KVCache(ks_, vs_, None, None, pos_arr.astype(jnp.int32))
+    kc, kscale = _quantize_kv(ks_, spec)
+    vc, vscale = _quantize_kv(vs_, spec)
+    return KVCache(kc, vc, kscale, vscale, pos_arr.astype(jnp.int32))

@@ -1,0 +1,275 @@
+"""Shared model primitives: quantized linears/embeddings, norms, RoPE.
+
+Every quantizable tensor lives in a small sub-dict {"w", ["b"], ["w_scale"],
+["a_scale", "a_offset"]} keyed by a NAME whose identity maps to a policy
+"kind" (NAME2KIND). That convention lets a single tree-walk discover every
+quantized module for OBR / oscillation / checkpoint metadata, including the
+vmap-stacked copies created by the scan-over-layers layout.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import QuantConfig, act_spec, weight_spec
+from repro.core.quantizer import fake_quant, init_offset, init_scale
+
+# Param-name -> policy kind. Names are unique per kind across all block types.
+NAME2KIND = {
+    # attention
+    "wq": "attn_q", "wk": "attn_k", "wv": "attn_v", "wo": "attn_o",
+    # cross attention (VLM)
+    "xq": "cross_q", "xk": "cross_k", "xv": "cross_v", "xo": "cross_o",
+    # dense ffn
+    "w_in": "ffn_in", "w_gate": "ffn_gate", "w_out": "ffn_out",
+    # moe
+    "moe_in": "moe_in", "moe_gate": "moe_gate", "moe_out": "moe_out",
+    "router": "router",
+    # xlstm
+    "mq": "xlstm_qkv", "mk": "xlstm_qkv", "mv": "xlstm_qkv",
+    "m_up": "xlstm_proj", "m_up_gate": "xlstm_proj", "m_down": "xlstm_proj",
+    "m_i": "xlstm_gates", "m_f": "xlstm_gates",
+    "s_z": "xlstm_proj", "s_r": "xlstm_proj",
+    "s_i": "xlstm_gates", "s_f": "xlstm_gates", "s_o": "xlstm_gates",
+    # rglru
+    "g_in": "rglru_in", "g_gate": "rglru_in", "g_a": "rglru_in",
+    "g_x": "rglru_in", "g_out": "rglru_out",
+    # edges
+    "embed": "embed", "lm_head": "lm_head", "frontend": "frontend",
+}
+
+
+def kind_of(name: str) -> str:
+    return NAME2KIND[name]
+
+
+# ---------------------------------------------------------------------------
+# Quantized linear
+# ---------------------------------------------------------------------------
+
+def linear_init(key, name: str, qcfg: QuantConfig, shape: tuple[int, ...], *,
+                std: float, group_axes: tuple[int, ...] = (),
+                bias_shape: Optional[tuple[int, ...]] = None) -> dict:
+    """Create one (possibly quantized) linear's parameter sub-dict."""
+    kind = kind_of(name)
+    w = jax.random.normal(key, shape, jnp.float32) * std
+    p = {"w": w}
+    if bias_shape is not None:
+        p["b"] = jnp.zeros(bias_shape, jnp.float32)
+    wspec = weight_spec(qcfg, kind)
+    if wspec is not None:
+        ga = group_axes if wspec.granularity != "per_tensor" else ()
+        p["w_scale"] = init_scale(w, wspec, ga)
+    aspec = act_spec(qcfg, kind)
+    if aspec is not None:
+        # Calibrated lazily (core/calibration.py); 1.0 is a safe LSQ+ start.
+        p["a_scale"] = jnp.ones((), jnp.float32)
+        if aspec.offset:
+            p["a_offset"] = jnp.zeros((), jnp.float32)
+    return p
+
+
+def qlinear(p: dict, x: jax.Array, name: str, qcfg: QuantConfig, eq: str,
+            cdtype=jnp.bfloat16) -> jax.Array:
+    """Apply a quantized einsum-linear: fake-quant acts & weights, contract.
+
+    Quantization math runs in f32 (bf16 was measured to give NO memory-term
+    reduction — XLA fuses the upcast chain — while adding rounding noise;
+    EXPERIMENTS.md Perf-3, refuted). The contraction runs in the compute
+    dtype. On TPU the fused Pallas path (kernels/quant_matmul) replaces the
+    2D-matmul case.
+    """
+    kind = kind_of(name)
+    if "codes" in p:
+        # Serving path: weights stored as int codes + scale (HBM = 1 byte/el;
+        # dequantized tile-wise into the matmul — the Pallas quant_matmul
+        # kernel fuses this on TPU).
+        w = p["codes"].astype(cdtype) * p["w_scale"].astype(cdtype)
+        y = jnp.einsum(eq, x.astype(cdtype), w)
+        if "b" in p:
+            y = y + p["b"].astype(cdtype)
+        return y
+    w = p["w"]
+    aspec = act_spec(qcfg, kind)
+    if aspec is not None:
+        xq = fake_quant(x.astype(jnp.float32), p["a_scale"], aspec,
+                        offset=p.get("a_offset"), grad_scale_ref=w)
+        x = xq.astype(cdtype)
+    else:
+        x = x.astype(cdtype)
+    wspec = weight_spec(qcfg, kind)
+    if wspec is not None:
+        w = fake_quant(w, p["w_scale"], wspec)
+    y = jnp.einsum(eq, x, w.astype(cdtype))
+    if "b" in p:
+        y = y + p["b"].astype(cdtype)
+    return y
+
+
+def quantized_weight(p: dict, name: str, qcfg: QuantConfig) -> jax.Array:
+    """The fake-quantized weight (f32) of a linear sub-dict."""
+    if "codes" in p:
+        return p["codes"].astype(jnp.float32) * p["w_scale"].astype(jnp.float32)
+    kind = kind_of(name)
+    wspec = weight_spec(qcfg, kind)
+    if wspec is None:
+        return p["w"]
+    return fake_quant(p["w"], p["w_scale"], wspec)
+
+
+def convert_to_serving(params, qcfg: QuantConfig):
+    """Freeze QAT weights into int8 code + scale storage for serving.
+
+    Every quantized linear's latent f32 "w" is replaced by its int codes
+    (1 byte/element in HBM; int4 values occupy int8 storage — sub-byte
+    packing is a documented TODO halving this again). Activation quantizer
+    params are dropped (no STE at inference). Non-quantized weights are cast
+    to bf16.
+    """
+    from repro.core.quantizer import quantize_int
+
+    def walk(node):
+        if isinstance(node, dict):
+            out = {}
+            for name, child in node.items():
+                if (isinstance(child, dict) and "w" in child
+                        and "w_scale" in child and name in NAME2KIND
+                        and weight_spec(qcfg, NAME2KIND[name]) is not None):
+                    spec = weight_spec(qcfg, NAME2KIND[name])
+                    w, sc = child["w"], child["w_scale"]
+                    if sc.ndim not in (0, w.ndim):  # stacked per-tensor scale
+                        sc = sc.reshape(sc.shape + (1,) * (w.ndim - sc.ndim))
+                    new = {"codes": quantize_int(w, sc, spec), "w_scale": sc}
+                    if "b" in child:
+                        new["b"] = child["b"].astype(jnp.bfloat16)
+                    out[name] = new
+                else:
+                    out[name] = walk(child)
+            return out
+        if isinstance(node, (tuple, list)):
+            return type(node)(walk(c) for c in node)
+        if hasattr(node, "dtype") and node.dtype == jnp.float32:
+            return node.astype(jnp.bfloat16)
+        return node
+
+    return walk(params)
+
+
+# ---------------------------------------------------------------------------
+# Embedding (vocab-padded, 8-bit edge quantization per the paper)
+# ---------------------------------------------------------------------------
+
+def embed_init(key, qcfg: QuantConfig, vocab_padded: int, d_model: int) -> dict:
+    w = jax.random.normal(key, (vocab_padded, d_model), jnp.float32) * 0.02
+    p = {"w": w}
+    spec = weight_spec(qcfg, "embed")
+    if spec is not None:
+        p["w_scale"] = init_scale(w, spec)
+    return p
+
+
+def embed_lookup(p: dict, tokens: jax.Array, qcfg: QuantConfig,
+                 cdtype=jnp.bfloat16) -> jax.Array:
+    if "codes" in p:
+        rows = jnp.take(p["codes"], tokens, axis=0).astype(cdtype)
+        return rows * p["w_scale"].astype(cdtype)
+    w = quantized_weight(p, "embed", qcfg)
+    return jnp.take(w.astype(cdtype), tokens, axis=0)
+
+
+def lm_head_init(key, qcfg: QuantConfig, d_model: int, vocab_padded: int) -> dict:
+    return linear_init(key, "lm_head", qcfg, (d_model, vocab_padded),
+                       std=d_model ** -0.5)
+
+
+def lm_head_apply(p: dict, x: jax.Array, qcfg: QuantConfig, vocab_size: int,
+                  vocab_padded: int, final_softcap: float = 0.0,
+                  tied_embed: Optional[dict] = None) -> jax.Array:
+    """Project to (padded) vocab logits in f32; mask padding columns."""
+    if tied_embed is not None:
+        w = quantized_weight(tied_embed, "embed", qcfg).T  # (d, V)
+        w = w.astype(jnp.bfloat16)
+        aspec = act_spec(qcfg, "lm_head")
+        if aspec is not None and "a_scale" in p:
+            x = fake_quant(x.astype(jnp.float32), p["a_scale"], aspec,
+                           offset=p.get("a_offset"), grad_scale_ref=w)
+        logits = jnp.einsum("bsd,dv->bsv", x.astype(jnp.bfloat16),
+                            w.astype(jnp.bfloat16),
+                            preferred_element_type=jnp.float32)
+    elif "codes" in p:
+        w = p["codes"].astype(jnp.bfloat16) * p["w_scale"].astype(jnp.bfloat16)
+        logits = jnp.einsum("bsd,dv->bsv", x.astype(jnp.bfloat16), w,
+                            preferred_element_type=jnp.float32)
+    else:
+        kind = "lm_head"
+        w = p["w"]
+        aspec = act_spec(qcfg, kind)
+        if aspec is not None:
+            x = fake_quant(x.astype(jnp.float32), p["a_scale"], aspec,
+                           offset=p.get("a_offset"), grad_scale_ref=w)
+        wspec = weight_spec(qcfg, kind)
+        if wspec is not None:
+            w = fake_quant(w, p["w_scale"], wspec)
+        logits = jnp.einsum("bsd,dv->bsv", x.astype(jnp.bfloat16),
+                            w.astype(jnp.bfloat16),
+                            preferred_element_type=jnp.float32)
+    if final_softcap > 0.0:
+        logits = final_softcap * jnp.tanh(logits / final_softcap)
+    if vocab_padded != vocab_size:
+        pad_mask = jax.lax.broadcasted_iota(jnp.int32, (vocab_padded,), 0) < vocab_size
+        logits = jnp.where(pad_mask, logits, -1e9)
+    return logits
+
+
+def tied_head_act_init(qcfg: QuantConfig) -> dict:
+    """Activation quantizer params for a tied lm_head (no weight of its own)."""
+    p = {}
+    aspec = act_spec(qcfg, "lm_head")
+    if aspec is not None:
+        p["a_scale"] = jnp.ones((), jnp.float32)
+        if aspec.offset:
+            p["a_offset"] = jnp.zeros((), jnp.float32)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Norms / activations / RoPE
+# ---------------------------------------------------------------------------
+
+def norm_init(d: int, kind: str) -> dict:
+    if kind == "layernorm":
+        return {"g": jnp.ones((d,), jnp.float32), "b": jnp.zeros((d,), jnp.float32)}
+    return {"g": jnp.ones((d,), jnp.float32)}
+
+
+def apply_norm(p: dict, x: jax.Array, kind: str, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if kind == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + eps) * p["g"] + p["b"]
+    else:  # rmsnorm
+        ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(ms + eps) * p["g"]
+    return out.astype(x.dtype)
+
+
+def activation(x: jax.Array, kind: str) -> jax.Array:
+    if kind == "gelu":
+        return jax.nn.gelu(x)
+    return jax.nn.silu(x)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding. x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = jnp.exp(-jnp.log(theta) * jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq  # (..., seq, half)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)

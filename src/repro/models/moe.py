@@ -1,0 +1,124 @@
+"""Mixture-of-Experts FFN with capacity-factor routing (GShard-style).
+
+FLOPs scale with top_k (plus capacity slack), not with n_experts: tokens are
+scatter-packed into (E, C, d) buffers, run through a batched expert matmul,
+and gathered back weighted by their gates. Over-capacity tokens are dropped
+(standard capacity routing; the residual path carries them).
+
+Expert weights are stored (E, d_in, d_out) so the paper's MDQ generalizes to
+per-EXPERT scales (beyond-paper, DESIGN.md Sec. 5). Sharding: the expert
+axis maps to the "model" mesh axis when divisible (EP), otherwise d_ff does
+(TP within experts) — dist/sharding.py decides per shape.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import QuantConfig
+from repro.configs.base import ArchConfig
+from repro.models.common import linear_init, qlinear
+
+
+def moe_init(key, cfg: ArchConfig, qcfg: QuantConfig) -> dict:
+    e, d, f = cfg.n_experts, cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 4)
+    p = {
+        "router": linear_init(ks[0], "router", qcfg, (d, e), std=d ** -0.5),
+        "moe_in": linear_init(ks[1], "moe_in", qcfg, (e, d, f),
+                              std=d ** -0.5, group_axes=(0,)),
+        "moe_out": linear_init(ks[2], "moe_out", qcfg, (e, f, d),
+                               std=f ** -0.5, group_axes=(0,)),
+    }
+    if cfg.ffn_gated:
+        p["moe_gate"] = linear_init(ks[3], "moe_gate", qcfg, (e, d, f),
+                                    std=d ** -0.5, group_axes=(0,))
+    return p
+
+
+def capacity(n_tokens: int, cfg: ArchConfig) -> int:
+    c = int(n_tokens * cfg.moe_top_k / cfg.n_experts * cfg.capacity_factor)
+    return max(8, (c + 7) // 8 * 8)
+
+
+def _route_group(xt, gate_vals, exp_idx, c: int, e: int, k: int, cdtype):
+    """Capacity-pack one locality group's tokens. xt: (t, d)."""
+    t, d = xt.shape
+    flat_e = exp_idx.reshape(-1)                            # (t*k,)
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)     # (t*k, e)
+    pos = jnp.cumsum(onehot, axis=0) - onehot               # slots before me
+    my_pos = jnp.sum(pos * onehot, axis=-1)                 # (t*k,)
+    keep = my_pos < c
+    slot = jnp.where(keep, flat_e * c + my_pos, e * c)      # overflow -> dump row
+    tok_idx = jnp.repeat(jnp.arange(t), k)
+    disp = jnp.zeros((e * c + 1, d), cdtype)
+    disp = disp.at[slot].add(xt[tok_idx].astype(cdtype))    # dup slots impossible
+    return disp[: e * c].reshape(e, c, d), slot, keep
+
+
+def _combine_group(out_buf, slot, keep, gate_vals, e: int, c: int, k: int, cdtype):
+    d = out_buf.shape[-1]
+    flat_out = jnp.concatenate(
+        [out_buf.reshape(e * c, d), jnp.zeros((1, d), out_buf.dtype)], axis=0)
+    per_slot = flat_out[slot] * (gate_vals.reshape(-1, 1)
+                                 * keep[:, None]).astype(cdtype)
+    t = gate_vals.shape[0]
+    return jnp.sum(per_slot.reshape(t, k, d), axis=1)
+
+
+def moe_ffn(p: dict, x: jax.Array, cfg: ArchConfig, qcfg: QuantConfig,
+            cdtype=jnp.bfloat16):
+    """x: (B, S, d) -> (B, S, d); also returns aux metrics (load balance).
+
+    Dispatch locality (cfg.moe_dispatch_groups = DP degree at the launcher):
+    tokens are routed/capacity-packed WITHIN groups aligned to the data
+    shards, so the scatter/gather and the position cumsum never cross a
+    shard boundary — without this, SPMD replicates the capacity buffer and
+    all-reduces it per MoE layer per microbatch (EXPERIMENTS.md Perf-5).
+    """
+    b, s, d = x.shape
+    t = b * s
+    e, k = cfg.n_experts, cfg.moe_top_k
+    grp = cfg.moe_dispatch_groups
+    if grp <= 1 or t % grp or (t // grp) < 1:
+        grp = 1
+    xt = x.reshape(t, d)
+
+    logits = qlinear(p["router"], xt, "router", qcfg, "td,de->te",
+                     cdtype=jnp.float32)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gate_vals, exp_idx = jax.lax.top_k(probs, k)           # (t, k)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)  # renormalize top-k
+
+    tl = t // grp
+    c = capacity(tl, cfg)
+    xg = xt.reshape(grp, tl, d)
+    gv = gate_vals.reshape(grp, tl, k)
+    ei = exp_idx.reshape(grp, tl, k)
+
+    buf, slot, keep = jax.vmap(
+        lambda xx, ee: _route_group(xx, None, ee, c, e, k, cdtype),
+        in_axes=(0, 0))(xg, ei)                             # buf: (g, e, c, d)
+
+    # --- expert compute (batched over groups; per-expert quant scales) -----
+    if cfg.ffn_gated:
+        gt = qlinear(p["moe_gate"], buf, "moe_gate", qcfg, "gecd,edf->gecf", cdtype)
+        u = qlinear(p["moe_in"], buf, "moe_in", qcfg, "gecd,edf->gecf", cdtype)
+        h = jax.nn.silu(gt) * u if cfg.act == "silu" else jax.nn.gelu(gt) * u
+    else:
+        u = qlinear(p["moe_in"], buf, "moe_in", qcfg, "gecd,edf->gecf", cdtype)
+        h = jax.nn.silu(u) if cfg.act == "silu" else jax.nn.gelu(u)
+    out_buf = qlinear(p["moe_out"], h, "moe_out", qcfg, "gecf,efd->gecd", cdtype)
+
+    y = jax.vmap(
+        lambda ob, sl, kp, gg: _combine_group(ob, sl, kp, gg, e, c, k, cdtype)
+    )(out_buf, slot, keep, gv)                              # (g, tl, d)
+
+    # load-balance aux loss (Switch-style) + drop fraction telemetry
+    me = jnp.mean(probs, axis=0)                            # (e,)
+    onehot_all = jax.nn.one_hot(exp_idx.reshape(-1), e, dtype=jnp.float32)
+    ce_frac = jnp.mean(onehot_all, axis=0) * k
+    aux = {"lb_loss": e * jnp.sum(me * ce_frac) / k,
+           "drop_frac": 1.0 - jnp.mean(keep.astype(jnp.float32))}
+    return y.reshape(b, s, d), aux

@@ -1,0 +1,336 @@
+"""Recurrent blocks: mLSTM (chunkwise-parallel), sLSTM (scan), RG-LRU.
+
+TPU adaptation notes (DESIGN.md Sec. 3/5):
+  * mLSTM uses the stabilized chunkwise formulation: intra-chunk terms are
+    masked (L x L) matmuls on the MXU; inter-chunk state (C, n, m) carried by
+    a lax.scan over chunks. Log-domain max stabilizers keep exp() bounded.
+  * sLSTM is inherently sequential (scalar memory with recurrent mixing):
+    lax.scan over time.
+  * RG-LRU is a diagonal linear recurrence -> jax.lax.associative_scan.
+  * Causal depthwise convs (k<=4) are expressed as k shifted multiplies.
+
+Quantization: q/k/v projections get the paper's per-head MDQ scales
+("xlstm_qkv"); gate projections whose error compounds through the recurrence
+are pinned to >= 8 bits by the policy ("xlstm_gates" / "rglru_conv").
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.policy import QuantConfig
+from repro.models.common import linear_init, norm_init, apply_norm, qlinear
+
+
+def causal_conv(x: jax.Array, w: jax.Array, state: jax.Array | None = None):
+    """Depthwise causal conv. x: (B, S, C), w: (C, K).
+
+    Training (state=None): left-pad with zeros. Decode: `state` holds the
+    previous K-1 inputs (B, K-1, C); returns (y, new_state).
+    """
+    k = w.shape[1]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+        xp = jnp.concatenate([pad, x], axis=1)
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, j : j + x.shape[1]] * w[:, k - 1 - j].astype(x.dtype)
+            for j in range(k))
+    new_state = xp[:, -(k - 1):] if k > 1 else xp[:, :0]
+    return y, new_state
+
+
+# ===========================================================================
+# mLSTM
+# ===========================================================================
+
+def mlstm_init(key, cfg: ArchConfig, qcfg: QuantConfig) -> dict:
+    d = cfg.d_model
+    du = 2 * d
+    h = cfg.n_heads
+    dh = du // h
+    ks = jax.random.split(key, 9)
+    p = {
+        "ln": norm_init(d, cfg.norm),
+        "m_up_gate": linear_init(ks[0], "m_up_gate", qcfg, (d, du), std=d ** -0.5),
+        "m_up": linear_init(ks[1], "m_up", qcfg, (d, du), std=d ** -0.5),
+        "conv_w": jax.random.normal(ks[2], (du, cfg.conv_kernel), jnp.float32) * 0.1,
+        "mq": linear_init(ks[3], "mq", qcfg, (du, h, dh), std=du ** -0.5,
+                          group_axes=(1,)),
+        "mk": linear_init(ks[4], "mk", qcfg, (du, h, dh), std=du ** -0.5,
+                          group_axes=(1,)),
+        "mv": linear_init(ks[5], "mv", qcfg, (du, h, dh), std=du ** -0.5,
+                          group_axes=(1,)),
+        "m_i": linear_init(ks[6], "m_i", qcfg, (du, h), std=du ** -0.5,
+                           bias_shape=(h,)),
+        "m_f": linear_init(ks[7], "m_f", qcfg, (du, h), std=du ** -0.5,
+                           bias_shape=(h,)),
+        "hn_g": jnp.ones((h, dh), jnp.float32),  # per-head output norm
+        "m_down": linear_init(ks[8], "m_down", qcfg, (du, d), std=du ** -0.5),
+    }
+    return p
+
+
+def _mlstm_chunk_scan(q, k, v, i_raw, f_raw, carry, chunk: int):
+    """Stabilized chunkwise mLSTM.
+
+    q,k,v: (B,S,H,D); i_raw/f_raw: (B,S,H). carry: (C: (B,H,D,D),
+    n: (B,H,D), m: (B,H)) with C,n stored scaled by exp(-m).
+    Returns h: (B,S,H,D), new carry.
+    """
+    b, s, h, d = q.shape
+    l = max(1, min(chunk, s))
+    while s % l:
+        l //= 2
+    nc = s // l
+    scale = d ** -0.5
+
+    def reshape_c(x):
+        return x.reshape(b, nc, l, *x.shape[2:]).swapaxes(0, 1)
+
+    qs, ks_, vs = reshape_c(q * scale), reshape_c(k), reshape_c(v)
+    is_, fs = reshape_c(i_raw), reshape_c(f_raw)
+
+    def step(carry, inp):
+        c_hat, n_hat, m_prev = carry
+        qc, kc, vc, ic, fc = inp  # (B,L,H,*)
+        lf = jax.nn.log_sigmoid(fc.astype(jnp.float32))       # (B,L,H)
+        a = jnp.cumsum(lf, axis=1)                            # decay to t
+        a_tot = a[:, -1]                                      # (B,H)
+        ic = ic.astype(jnp.float32)
+        m_loc = jax.lax.cummax(ic - a, axis=1)                # (B,L,H)
+        m_t = a + jnp.maximum(m_prev[:, None], m_loc)         # (B,L,H)
+
+        # intra-chunk: w(t,j) = exp(a_t - a_j + i_j - m_t), j <= t
+        log_w = (a[:, :, None] - a[:, None, :]                # (B,L,L,H)
+                 + ic[:, None, :] - m_t[:, :, None])
+        mask = jnp.tril(jnp.ones((l, l), bool))
+        w = jnp.where(mask[None, :, :, None], jnp.exp(log_w), 0.0)
+        sc = jnp.einsum("bthd,bjhd->btjh", qc.astype(jnp.float32),
+                        kc.astype(jnp.float32))
+        wsc = w * sc
+        num = jnp.einsum("btjh,bjhd->bthd", wsc, vc.astype(jnp.float32))
+        den = jnp.einsum("btjh,bjhd->bthd", w, kc.astype(jnp.float32))
+
+        # inter-chunk: exp(a_t + m_prev - m_t) * (q_t @ C_hat)
+        w_in = jnp.exp(a + m_prev[:, None] - m_t)             # (B,L,H)
+        num = num + w_in[..., None] * jnp.einsum(
+            "bthd,bhde->bthe", qc.astype(jnp.float32), c_hat)
+        den_v = den + w_in[..., None] * n_hat[:, None]
+        qn = jnp.sum(qc.astype(jnp.float32) * den_v, axis=-1)  # (B,L,H)
+        denom = jnp.maximum(jnp.abs(qn), jnp.exp(-m_t))
+        h_out = num / denom[..., None]
+
+        # carry update
+        m_new = a_tot + jnp.maximum(m_prev, m_loc[:, -1])     # (B,H)
+        w_end = jnp.exp(a_tot[:, None] - a + ic - m_new[:, None])  # (B,L,H)
+        c_new = (jnp.exp(m_prev + a_tot - m_new)[..., None, None] * c_hat
+                 + jnp.einsum("blh,blhd,blhe->bhde", w_end,
+                              kc.astype(jnp.float32), vc.astype(jnp.float32)))
+        n_new = (jnp.exp(m_prev + a_tot - m_new)[..., None] * n_hat
+                 + jnp.einsum("blh,blhd->bhd", w_end, kc.astype(jnp.float32)))
+        return (c_new, n_new, m_new), h_out
+
+    carry, hs = jax.lax.scan(step, carry, (qs, ks_, vs, is_, fs))
+    return hs.swapaxes(0, 1).reshape(b, s, h, d), carry
+
+
+def mlstm_state_init(batch: int, n_heads: int, dh: int):
+    return (jnp.zeros((batch, n_heads, dh, dh), jnp.float32),
+            jnp.zeros((batch, n_heads, dh), jnp.float32),
+            jnp.full((batch, n_heads), -1e9, jnp.float32))
+
+
+def mlstm_fresh_state(cfg: ArchConfig, batch: int):
+    du = 2 * cfg.d_model
+    dh = du // cfg.n_heads
+    c, n, m = mlstm_state_init(batch, cfg.n_heads, dh)
+    return {"C": c, "n": n, "m": m,
+            "conv": jnp.zeros((batch, cfg.conv_kernel - 1, du), jnp.float32)}
+
+
+def mlstm_block(p: dict, x: jax.Array, cfg: ArchConfig, qcfg: QuantConfig,
+                cdtype=jnp.bfloat16, state=None, collect: bool = False,
+                chunk: int = 64):
+    """Full mLSTM residual block; works for any S (decode: S=1 + state)."""
+    b, s, d = x.shape
+    h = cfg.n_heads
+    du = 2 * d
+    dh = du // h
+    if state is None and collect:
+        state = mlstm_fresh_state(cfg, b)
+    xn = apply_norm(p["ln"], x, cfg.norm)
+    zg = qlinear(p["m_up_gate"], xn, "m_up_gate", qcfg, "bsd,du->bsu", cdtype)
+    xi = qlinear(p["m_up"], xn, "m_up", qcfg, "bsd,du->bsu", cdtype)
+    conv_state = None if state is None else state["conv"]
+    xc, new_conv = causal_conv(xi, p["conv_w"], conv_state)
+    xc = jax.nn.silu(xc)
+    q = qlinear(p["mq"], xc, "mq", qcfg, "bsu,uhd->bshd", cdtype)
+    k = qlinear(p["mk"], xc, "mk", qcfg, "bsu,uhd->bshd", cdtype) * dh ** -0.5
+    v = qlinear(p["mv"], xc, "mv", qcfg, "bsu,uhd->bshd", cdtype)
+    i_raw = qlinear(p["m_i"], xc, "m_i", qcfg, "bsu,uh->bsh", cdtype)
+    f_raw = qlinear(p["m_f"], xc, "m_f", qcfg, "bsu,uh->bsh", cdtype)
+
+    if state is None:
+        carry = mlstm_state_init(b, h, dh)
+    else:
+        carry = (state["C"], state["n"], state["m"])
+    hs, carry = _mlstm_chunk_scan(q, k, v, i_raw, f_raw, carry, chunk)
+    new_state = None
+    if state is not None:
+        new_state = {"C": carry[0], "n": carry[1], "m": carry[2],
+                     "conv": new_conv}
+
+    hs = hs * jax.lax.rsqrt(jnp.mean(hs * hs, axis=-1, keepdims=True) + 1e-6)
+    hs = hs * p["hn_g"][None, None]
+    hs = hs.reshape(b, s, du).astype(cdtype) * jax.nn.silu(zg)
+    out = qlinear(p["m_down"], hs, "m_down", qcfg, "bsu,ud->bsd", cdtype)
+    return x + out, new_state
+
+
+# ===========================================================================
+# sLSTM
+# ===========================================================================
+
+def slstm_init(key, cfg: ArchConfig, qcfg: QuantConfig) -> dict:
+    d = cfg.d_model
+    h = cfg.n_heads
+    dh = d // h
+    f_ff = int(math.ceil(4 * d / 3 / 8) * 8)
+    ks = jax.random.split(key, 12)
+    p = {"ln": norm_init(d, cfg.norm), "ln2": norm_init(d, cfg.norm),
+         "gn_g": jnp.ones((h, dh), jnp.float32),
+         "f_bias": jnp.ones((h, dh), jnp.float32) * 3.0}
+    for i, nm in enumerate(("s_z", "s_i", "s_f", "s_o")):
+        p[nm] = linear_init(ks[i], nm, qcfg, (d, h, dh), std=d ** -0.5,
+                            bias_shape=(h, dh))
+    # block-diagonal recurrent mixing (per head)
+    p["s_r"] = linear_init(ks[4], "s_r", qcfg, (4, h, dh, dh), std=dh ** -0.5)
+    p["w_gate"] = linear_init(ks[5], "w_gate", qcfg, (d, f_ff), std=d ** -0.5)
+    p["w_in"] = linear_init(ks[6], "w_in", qcfg, (d, f_ff), std=d ** -0.5)
+    p["w_out"] = linear_init(ks[7], "w_out", qcfg, (f_ff, d), std=f_ff ** -0.5)
+    return p
+
+
+def slstm_state_init(batch: int, n_heads: int, dh: int):
+    z = jnp.zeros((batch, n_heads, dh), jnp.float32)
+    return {"c": z, "n": z, "h": z, "m": jnp.full_like(z, -1e9)}
+
+
+def slstm_block(p: dict, x: jax.Array, cfg: ArchConfig, qcfg: QuantConfig,
+                cdtype=jnp.bfloat16, state=None, collect: bool = False):
+    """sLSTM residual block + its 4/3-GLU FFN sublayer (xLSTM recipe)."""
+    b, s, d = x.shape
+    h = cfg.n_heads
+    dh = d // h
+    xn = apply_norm(p["ln"], x, cfg.norm)
+    # pre-activations from inputs (recurrent part added in the scan)
+    pre = {nm: qlinear(p[nm], xn, nm, qcfg, "bsd,dhk->bshk", cdtype)
+           for nm in ("s_z", "s_i", "s_f", "s_o")}
+    pre["s_f"] = pre["s_f"] + p["f_bias"].astype(cdtype)
+    from repro.models.common import quantized_weight
+    # (4, h, dh, dh) recurrent mixing; handles fp / fake-quant / int-coded
+    r = quantized_weight(p["s_r"], "s_r", qcfg).astype(jnp.float32)
+
+    def cell(st, inp):
+        zt, it, ft, ot = inp  # (B,H,dh) each
+        rh = jnp.einsum("bhk,ghkl->gbhl", st["h"], r)  # (4,B,H,dh)
+        zt = jnp.tanh(zt.astype(jnp.float32) + rh[0])
+        it = it.astype(jnp.float32) + rh[1]
+        ft = ft.astype(jnp.float32) + rh[2]
+        ot = jax.nn.sigmoid(ot.astype(jnp.float32) + rh[3])
+        lf = jax.nn.log_sigmoid(ft)
+        m_new = jnp.maximum(lf + st["m"], it)
+        fp = jnp.exp(lf + st["m"] - m_new)
+        ip = jnp.exp(it - m_new)
+        c = fp * st["c"] + ip * zt
+        n = fp * st["n"] + ip
+        h_new = ot * c / jnp.maximum(n, 1e-6)
+        return {"c": c, "n": n, "h": h_new, "m": m_new}, h_new
+
+    seq = tuple(jnp.swapaxes(pre[nm], 0, 1) for nm in ("s_z", "s_i", "s_f", "s_o"))
+    want_state = collect or state is not None
+    st0 = slstm_state_init(b, h, dh) if state is None else state
+    st, hs = jax.lax.scan(cell, st0, seq)
+    hs = jnp.swapaxes(hs, 0, 1)  # (B,S,H,dh)
+    hs = hs * jax.lax.rsqrt(jnp.mean(hs * hs, axis=-1, keepdims=True) + 1e-6)
+    hs = (hs * p["gn_g"][None, None]).reshape(b, s, d).astype(cdtype)
+    x = x + hs
+    # FFN sublayer (4/3 GLU)
+    xn2 = apply_norm(p["ln2"], x, cfg.norm)
+    g = qlinear(p["w_gate"], xn2, "w_gate", qcfg, "bsd,df->bsf", cdtype)
+    u = qlinear(p["w_in"], xn2, "w_in", qcfg, "bsd,df->bsf", cdtype)
+    y = qlinear(p["w_out"], jax.nn.silu(g) * u, "w_out", qcfg, "bsf,fd->bsd", cdtype)
+    return x + y, (st if want_state else None)
+
+
+# ===========================================================================
+# RG-LRU (Griffin / RecurrentGemma recurrent block)
+# ===========================================================================
+
+LRU_C = 8.0
+
+
+def rglru_init(key, cfg: ArchConfig, qcfg: QuantConfig) -> dict:
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    ks = jax.random.split(key, 6)
+    # Lambda init so a = sigmoid(L)^c is in ~(0.9, 0.999)
+    lam = jax.random.uniform(ks[0], (w,), jnp.float32, 0.38, 0.8)
+    return {
+        "ln": norm_init(d, cfg.norm),
+        "g_gate": linear_init(ks[1], "g_gate", qcfg, (d, w), std=d ** -0.5),
+        "g_in": linear_init(ks[2], "g_in", qcfg, (d, w), std=d ** -0.5),
+        "conv_w": jax.random.normal(ks[3], (w, cfg.conv_kernel), jnp.float32) * 0.1,
+        "g_a": linear_init(ks[4], "g_a", qcfg, (w, w), std=w ** -0.5,
+                           bias_shape=(w,)),
+        "g_x": linear_init(ks[5], "g_x", qcfg, (w, w), std=w ** -0.5,
+                           bias_shape=(w,)),
+        "lam": lam,
+        "g_out": linear_init(jax.random.fold_in(key, 7), "g_out", qcfg, (w, d),
+                             std=w ** -0.5),
+    }
+
+
+def rglru_state_init(batch: int, width: int, conv_kernel: int):
+    return {"h": jnp.zeros((batch, width), jnp.float32),
+            "conv": jnp.zeros((batch, conv_kernel - 1, width), jnp.float32)}
+
+
+def rglru_block(p: dict, x: jax.Array, cfg: ArchConfig, qcfg: QuantConfig,
+                cdtype=jnp.bfloat16, state=None, collect: bool = False):
+    b, s, d = x.shape
+    w = cfg.lru_width or d
+    xn = apply_norm(p["ln"], x, cfg.norm)
+    gate = qlinear(p["g_gate"], xn, "g_gate", qcfg, "bsd,dw->bsw", cdtype)
+    xi = qlinear(p["g_in"], xn, "g_in", qcfg, "bsd,dw->bsw", cdtype)
+    conv_state = None if state is None else state["conv"]
+    xc, new_conv = causal_conv(xi, p["conv_w"], conv_state)
+
+    r = jax.nn.sigmoid(qlinear(p["g_a"], xc, "g_a", qcfg, "bsw,wv->bsv",
+                               jnp.float32))
+    i = jax.nn.sigmoid(qlinear(p["g_x"], xc, "g_x", qcfg, "bsw,wv->bsv",
+                               jnp.float32))
+    log_a = -LRU_C * jax.nn.softplus(p["lam"]) * r          # (B,S,w)
+    a = jnp.exp(log_a)
+    gated_x = i * xc.astype(jnp.float32)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-9)) * gated_x
+
+    want_state = collect or state is not None
+    if state is not None:
+        # fold the carried state into the first recurrence element
+        beta = beta.at[:, 0].add(a[:, 0] * state["h"])
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, beta), axis=1)
+    new_state = {"h": h[:, -1], "conv": new_conv} if want_state else None
+    out = (jax.nn.gelu(gate.astype(jnp.float32)) * h).astype(cdtype)
+    y = qlinear(p["g_out"], out, "g_out", qcfg, "bsw,wd->bsd", cdtype)
+    return x + y, new_state

@@ -1,0 +1,102 @@
+"""AdamW (from scratch, pytree-native) with decoupled weight decay.
+
+Weight decay applies only to matrix-like weights ("w", "pos_embed"); norms,
+biases, and — important for QAT — the learnable quantizer scales/offsets are
+exempt (decaying a scale factor toward 0 collapses the quantizer range).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr_peak: float = 5e-4
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 1e-4
+    clip_norm: float = 1.0
+    # "bfloat16" halves moment memory (~2.6 GiB/device on the 110B cell);
+    # the update math still runs in f32 (EXPERIMENTS.md Perf-7).
+    moments_dtype: str = "float32"
+
+
+class AdamWState(NamedTuple):
+    mu: Any
+    nu: Any
+
+
+def init(params, cfg: "AdamWConfig | None" = None) -> AdamWState:
+    mdt = jnp.bfloat16 if (cfg and cfg.moments_dtype == "bfloat16") else jnp.float32
+    z = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=mdt), params)
+    return AdamWState(mu=z, nu=jax.tree.map(jnp.copy, z))
+
+
+def _decay_mask(params):
+    def mask_path(path, leaf):
+        keys = [getattr(k, "key", getattr(k, "name", None)) for k in path]
+        return 1.0 if any(k in ("w", "pos_embed") for k in keys) else 0.0
+    return jax.tree_util.tree_map_with_path(mask_path, params)
+
+
+SCALE_FLOOR = 1e-6
+
+
+def _project_scales(params):
+    """Quantizer scales must stay positive: Adam steps are ~lr-sized while
+    LSQ scale inits can be ~1e-3, so unconstrained updates can cross zero —
+    after which max(s, eps) silently zeroes the quantizer output and kills
+    its gradient (a collapsed, unrecoverable module). Project to a floor
+    after every update (standard practice in LSQ+ deployments)."""
+    def proj(path, leaf):
+        keys = [str(getattr(k, "key", getattr(k, "name", ""))) for k in path]
+        if keys and keys[-1] in ("w_scale", "a_scale"):
+            return jnp.maximum(leaf, SCALE_FLOOR)
+        return leaf
+    return jax.tree_util.tree_map_with_path(proj, params)
+
+
+def global_norm(tree) -> jax.Array:
+    sq = jax.tree.reduce(
+        lambda a, b: a + b,
+        jax.tree.map(lambda g: jnp.sum(jnp.square(g.astype(jnp.float32))), tree),
+        jnp.asarray(0.0, jnp.float32))
+    return jnp.sqrt(sq)
+
+
+def update(grads, state: AdamWState, params, step: jax.Array, lr: jax.Array,
+           cfg: AdamWConfig):
+    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    t = (step + 1).astype(jnp.float32)
+    bc1 = 1.0 - cfg.b1 ** t
+    bc2 = 1.0 - cfg.b2 ** t
+    decay = _decay_mask(params)
+
+    def upd(g, m, v, p, dm):
+        mdt = m.dtype
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m.astype(jnp.float32) + (1.0 - cfg.b1) * g
+        v = cfg.b2 * v.astype(jnp.float32) + (1.0 - cfg.b2) * g * g
+        mh = m / bc1
+        vh = v / bc2
+        step_val = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * dm * p.astype(jnp.float32)
+        return ((p.astype(jnp.float32) - lr * step_val).astype(p.dtype),
+                m.astype(mdt), v.astype(mdt))
+
+    treedef = jax.tree.structure(params)
+    results = [upd(g, m, v, p, dm) for g, m, v, p, dm in zip(
+        jax.tree.leaves(grads), jax.tree.leaves(state.mu),
+        jax.tree.leaves(state.nu), jax.tree.leaves(params),
+        jax.tree.leaves(decay))]
+    new_params = _project_scales(
+        jax.tree.unflatten(treedef, [r[0] for r in results]))
+    new_mu = jax.tree.unflatten(treedef, [r[1] for r in results])
+    new_nu = jax.tree.unflatten(treedef, [r[2] for r in results])
+    return new_params, AdamWState(new_mu, new_nu), {"grad_norm": gnorm}

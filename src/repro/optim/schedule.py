@@ -1,0 +1,24 @@
+"""Learning-rate and regularizer-coefficient schedules (paper Appendix B)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(step, *, peak: float, warmup_steps: int, total_steps: int,
+                  min_lr: float = 1e-5):
+    """Linear warmup then cosine decay to min_lr (paper Tab. 11 recipe)."""
+    step = jnp.asarray(step, jnp.float32)
+    warm = peak * step / jnp.maximum(warmup_steps, 1)
+    frac = jnp.clip((step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1),
+                    0.0, 1.0)
+    cos = min_lr + 0.5 * (peak - min_lr) * (1.0 + jnp.cos(jnp.pi * frac))
+    return jnp.where(step < warmup_steps, warm, cos)
+
+
+def linear_warmup_decay(step, *, peak: float, warmup_steps: int, total_steps: int):
+    """BERT-style linear schedule (paper Tab. 10 recipe)."""
+    step = jnp.asarray(step, jnp.float32)
+    warm = peak * step / jnp.maximum(warmup_steps, 1)
+    frac = jnp.clip((step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1),
+                    0.0, 1.0)
+    return jnp.where(step < warmup_steps, warm, peak * (1.0 - frac))

@@ -1,0 +1,142 @@
+"""Checkpointing: atomic, async-capable, elastic-reshard on restore.
+
+Format: one .npz per step (leaves keyed by flattened tree paths) + a JSON
+manifest (step, config fingerprint, mesh shape at save time). Writes go to a
+temp file then os.replace -> readers never observe partial checkpoints.
+Restore accepts a target mesh/sharding tree: arrays are device_put with the
+NEW shardings, so a checkpoint taken on one mesh restores onto another
+(elastic scaling). A background thread makes saves non-blocking; `wait()`
+drains it (called before exit / preemption).
+
+At true multi-host scale each host would write only its addressable shards;
+this single-process container writes full arrays — the manifest layout and
+the restore-with-resharding path are identical either way (DESIGN.md Sec. 7).
+"""
+from __future__ import annotations
+
+import json
+import os
+import queue
+import tempfile
+import threading
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", getattr(k, "name", k))))
+                       for k in path)
+        out[key] = leaf
+    return out
+
+
+def save(path_dir: str, state: Any, step: int, *, meta: Optional[dict] = None,
+         keep_last: int = 3) -> str:
+    os.makedirs(path_dir, exist_ok=True)
+    leaves = _flatten_with_paths(state)
+    arrays = {k: np.asarray(jax.device_get(v)) for k, v in leaves.items()}
+    fname = os.path.join(path_dir, f"ckpt_{step:08d}.npz")
+    fd, tmp = tempfile.mkstemp(dir=path_dir, suffix=".npz.tmp")
+    os.close(fd)
+    with open(tmp, "wb") as f:
+        np.savez(f, **arrays)
+    os.replace(tmp, fname)
+    manifest = {"step": step, "file": os.path.basename(fname),
+                "keys": sorted(arrays.keys()), **(meta or {})}
+    mtmp = fname + ".manifest.tmp"
+    with open(mtmp, "w") as f:
+        json.dump(manifest, f)
+    os.replace(mtmp, os.path.join(path_dir, "manifest.json"))
+    _gc(path_dir, keep_last)
+    return fname
+
+
+def _gc(path_dir: str, keep_last: int) -> None:
+    ckpts = sorted(f for f in os.listdir(path_dir)
+                   if f.startswith("ckpt_") and f.endswith(".npz"))
+    for f in ckpts[:-keep_last]:
+        try:
+            os.remove(os.path.join(path_dir, f))
+        except OSError:
+            pass
+
+
+def latest_step(path_dir: str) -> Optional[int]:
+    mf = os.path.join(path_dir, "manifest.json")
+    if not os.path.exists(mf):
+        return None
+    with open(mf) as f:
+        return json.load(f)["step"]
+
+
+def restore(path_dir: str, like: Any, *, step: Optional[int] = None,
+            shardings: Any = None) -> Any:
+    """Load into the structure of `like` (arrays or ShapeDtypeStructs).
+
+    shardings: optional pytree of jax.sharding.Sharding matching `like` —
+    arrays are placed with these (elastic re-shard onto a new mesh).
+    """
+    if step is None:
+        step = latest_step(path_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {path_dir}")
+    data = np.load(os.path.join(path_dir, f"ckpt_{step:08d}.npz"))
+    flat = _flatten_with_paths(like)
+    shard_flat = _flatten_with_paths(shardings) if shardings is not None else {}
+    out = {}
+    for key, ref in flat.items():
+        if key not in data:
+            raise KeyError(f"checkpoint missing leaf {key!r} "
+                           f"(config mismatch? step {step})")
+        arr = jnp.asarray(data[key], dtype=ref.dtype)
+        if arr.shape != tuple(ref.shape):
+            raise ValueError(f"shape mismatch for {key}: ckpt {arr.shape} "
+                             f"vs model {tuple(ref.shape)}")
+        if key in shard_flat and shard_flat[key] is not None:
+            arr = jax.device_put(arr, shard_flat[key])
+        out[key] = arr
+    # rebuild the tree
+    paths_leaves, treedef = jax.tree_util.tree_flatten_with_path(like)
+    keys = ["/".join(str(getattr(k, "key", getattr(k, "idx", getattr(k, "name", k))))
+                     for k in path) for path, _ in paths_leaves]
+    return jax.tree_util.tree_unflatten(treedef, [out[k] for k in keys])
+
+
+class AsyncCheckpointer:
+    """Fire-and-forget saves on a worker thread (off the step critical path)."""
+
+    def __init__(self, path_dir: str, keep_last: int = 3):
+        self.path_dir = path_dir
+        self.keep_last = keep_last
+        self._q: "queue.Queue" = queue.Queue(maxsize=2)
+        self._worker = threading.Thread(target=self._run, daemon=True)
+        self._worker.start()
+        self.errors: list[BaseException] = []
+
+    def _run(self):
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            state_np, step, meta = item
+            try:
+                save(self.path_dir, state_np, step, meta=meta,
+                     keep_last=self.keep_last)
+            except BaseException as e:  # surfaced via .errors
+                self.errors.append(e)
+
+    def submit(self, state: Any, step: int, meta: Optional[dict] = None):
+        # device_get on the caller thread (cheap on CPU; on TPU this is the
+        # D2H copy we deliberately take off the XLA stream)
+        state_np = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), state)
+        self._q.put((state_np, step, meta))
+
+    def wait(self):
+        self._q.put(None)
+        self._worker.join()

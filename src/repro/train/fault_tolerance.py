@@ -1,0 +1,98 @@
+"""Fault tolerance: checkpoint manager, preemption handling, straggler watch.
+
+Designed for the 1000+-node posture (DESIGN.md Sec. 7):
+  * CheckpointManager: restore-on-start, periodic async saves, save-on-exit.
+  * Preemption: SIGTERM/SIGINT flips a flag; the train loop checkpoints and
+    exits cleanly at the next step boundary (TPU preemption notice pattern).
+  * StragglerWatch: per-step wall-time EMA; steps slower than `ratio` x the
+    median EMA are flagged (on a real cluster the launcher re-slots the slow
+    host; data order is (step, host_index)-keyed so a replacement host
+    resumes an identical stream — data/synthetic.py).
+"""
+from __future__ import annotations
+
+import signal
+import time
+from typing import Any, Optional
+
+from repro.train import checkpoint as ckpt
+
+
+class PreemptionGuard:
+    def __init__(self):
+        self.requested = False
+        self._orig = {}
+        for sig in (signal.SIGTERM, signal.SIGINT):
+            try:
+                self._orig[sig] = signal.signal(sig, self._handler)
+            except ValueError:  # non-main thread (tests)
+                pass
+
+    def _handler(self, signum, frame):
+        self.requested = True
+
+    def restore_handlers(self):
+        for sig, h in self._orig.items():
+            signal.signal(sig, h)
+
+
+class StragglerWatch:
+    def __init__(self, ratio: float = 2.0, momentum: float = 0.1):
+        self.ratio = ratio
+        self.momentum = momentum
+        self.ema: Optional[float] = None
+        self.flags = 0
+        self._last: Optional[float] = None
+
+    def tick(self) -> bool:
+        """Call once per step; returns True when the step was a straggler."""
+        now = time.monotonic()
+        if self._last is None:
+            self._last = now
+            return False
+        dt = now - self._last
+        self._last = now
+        if self.ema is None:
+            self.ema = dt
+            return False
+        slow = dt > self.ratio * self.ema
+        self.ema = (1 - self.momentum) * self.ema + self.momentum * dt
+        self.flags += int(slow)
+        return slow
+
+
+class CheckpointManager:
+    def __init__(self, path_dir: str, save_every: int = 100, keep_last: int = 3,
+                 async_io: bool = True):
+        self.path_dir = path_dir
+        self.save_every = save_every
+        self.async_ = ckpt.AsyncCheckpointer(path_dir, keep_last) if async_io else None
+        self.keep_last = keep_last
+        self.guard = PreemptionGuard()
+        self.straggler = StragglerWatch()
+
+    def restore_or_init(self, init_fn, like: Any, shardings: Any = None):
+        step = ckpt.latest_step(self.path_dir)
+        if step is None:
+            return init_fn(), 0
+        state = ckpt.restore(self.path_dir, like, step=step, shardings=shardings)
+        return state, step
+
+    def maybe_save(self, state: Any, step: int, *, force: bool = False) -> bool:
+        due = force or self.guard.requested or (step > 0 and step % self.save_every == 0)
+        if not due:
+            return False
+        if self.async_ is not None:
+            self.async_.submit(state, step)
+        else:
+            ckpt.save(self.path_dir, state, step, keep_last=self.keep_last)
+        return True
+
+    def should_stop(self) -> bool:
+        return self.guard.requested
+
+    def finalize(self):
+        if self.async_ is not None:
+            self.async_.wait()
+            if self.async_.errors:
+                raise self.async_.errors[0]

@@ -1,0 +1,58 @@
+"""Train state: params + AdamW moments + step + QAT telemetry state.
+
+Kept as a plain dict pytree so sharding-spec trees mirror it trivially.
+Layout:
+  {"params": ..., "mu": ..., "nu": ..., "step": int32 scalar,
+   "osc": tuple[OscState, ...] | (),   # one per quant leaf, Eq. 11-12
+   "err": grads-shaped tree | ()}      # error feedback for compression
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.oscillation import init_osc_state
+from repro.core.policy import QuantConfig
+from repro.models.model import init_params, quant_leaves
+from repro.optim import adamw
+from repro.optim.adamw import AdamWConfig
+from repro.optim.grad_compress import init_error_tree
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    total_steps: int = 1000
+    warmup_steps: int = 50
+    grad_accum: int = 1
+    kd: str = "none"          # none | teacher | mckd
+    kd_topk: int = 16
+    kd_temperature: float = 1.0
+    lb_coef: float = 0.01     # MoE load-balance coefficient
+    compress_grads: bool = False
+    lr_schedule: str = "cosine"
+    adamw: AdamWConfig = AdamWConfig()
+
+    def replace(self, **kw) -> "TrainConfig":
+        return dataclasses.replace(self, **kw)
+
+
+def init_state(key, cfg: ArchConfig, qcfg: QuantConfig, tcfg: TrainConfig) -> dict:
+    params = init_params(key, cfg, qcfg)
+    opt = adamw.init(params, tcfg.adamw)
+    state = {
+        "params": params,
+        "mu": opt.mu,
+        "nu": opt.nu,
+        "step": jnp.zeros((), jnp.int32),
+        "osc": (),
+        "err": (),
+    }
+    if qcfg.track_oscillation:
+        state["osc"] = tuple(init_osc_state(w, s, spec)
+                             for w, s, spec in quant_leaves(params, qcfg))
+    if tcfg.compress_grads:
+        state["err"] = init_error_tree(params)
+    return state

@@ -1,0 +1,163 @@
+"""The jitted training step: KD (+ OBR + load-balance) loss, gradient
+accumulation, AdamW, oscillation telemetry, optional gradient compression.
+
+loss = L_KD (Eq. 8/9, or hard CE when kd="none")
+     + lambda(t) * L_OBR (Eq. 10, cosine-ramped)
+     + lb_coef * L_load_balance (MoE archs)
+
+Gradient accumulation scans over microbatches so activation memory is
+grad_accum-fold smaller; XLA overlaps the per-microbatch backward collectives
+with the next microbatch's compute (latency-hiding scheduler).
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.kd import hard_ce, kd_from_teacher_logits, sparse_soft_ce
+from repro.core.obr import obr_lambda_schedule, total_obr_loss
+from repro.core.oscillation import oscillation_fraction, update_osc_state
+from repro.core.policy import QuantConfig
+from repro.models.model import forward, quant_leaves
+from repro.optim import adamw, schedule
+from repro.optim.grad_compress import compress_tree
+from repro.train.state import TrainConfig
+
+Constrain = Callable[[jax.Array], jax.Array]
+_IDENT: Constrain = lambda x: x
+
+
+def make_loss_fn(cfg: ArchConfig, qcfg: QuantConfig, tcfg: TrainConfig, *,
+                 constrain: Constrain = _IDENT,
+                 logits_constrain: Constrain = _IDENT,
+                 teacher_forward: Optional[Callable] = None,
+                 extra_loss: Optional[Callable] = None):
+    def loss_fn(params, batch, step):
+        logits, aux = forward(params, batch, cfg, qcfg, remat=True,
+                              constrain=constrain,
+                              logits_constrain=logits_constrain)
+        if tcfg.kd == "mckd":
+            main = sparse_soft_ce(logits, batch["kd_idx"], batch["kd_p"])
+        elif tcfg.kd == "teacher":
+            t_logits = teacher_forward(batch)
+            main = kd_from_teacher_logits(logits, t_logits,
+                                          temperature=tcfg.kd_temperature)
+        else:
+            main = hard_ce(logits, batch["labels"])
+        # NOTE: OBR (Eq. 10) is batch-independent — it is applied ONCE per
+        # step in train_step, outside the microbatch loop (perf: avoids
+        # param-sized f32 traffic per microbatch; see EXPERIMENTS.md Perf-1).
+        loss = main + tcfg.lb_coef * aux["lb_loss"]
+        if extra_loss is not None:
+            loss = loss + extra_loss(params, step)
+        metrics = {"loss_main": main,
+                   "lb_loss": aux["lb_loss"], "drop_frac": aux["drop_frac"],
+                   "act_sdam": aux["act_sdam"]}
+        return loss, metrics
+    return loss_fn
+
+
+def _split_microbatches(batch: dict, n: int) -> dict:
+    return {k: v.reshape(n, v.shape[0] // n, *v.shape[1:])
+            for k, v in batch.items()}
+
+
+def make_train_step(cfg: ArchConfig, qcfg: QuantConfig, tcfg: TrainConfig, *,
+                    constrain: Constrain = _IDENT,
+                    logits_constrain: Constrain = _IDENT,
+                    teacher_forward: Optional[Callable] = None,
+                    extra_loss: Optional[Callable] = None):
+    """Returns train_step(state, batch) -> (state, metrics). Pure; jit-ready."""
+    loss_fn = make_loss_fn(cfg, qcfg, tcfg, constrain=constrain,
+                           logits_constrain=logits_constrain,
+                           teacher_forward=teacher_forward,
+                           extra_loss=extra_loss)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(state: dict, batch: dict):
+        params, step = state["params"], state["step"]
+
+        if tcfg.grad_accum > 1:
+            mbs = _split_microbatches(batch, tcfg.grad_accum)
+
+            def accum(carry, mb):
+                g_acc, l_acc, m_acc = carry
+                (l, m), g = grad_fn(params, mb, step)
+                g_acc = jax.tree.map(jnp.add, g_acc, g)
+                m_acc = jax.tree.map(jnp.add, m_acc, m)
+                return (g_acc, l_acc + l, m_acc), None
+
+            zeros_g = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            zeros_m = {"loss_main": 0.0,
+                       "lb_loss": 0.0, "drop_frac": 0.0, "act_sdam": 0.0}
+            zeros_m = jax.tree.map(lambda x: jnp.asarray(x, jnp.float32), zeros_m)
+            (grads, loss, metrics), _ = jax.lax.scan(
+                accum, (zeros_g, jnp.asarray(0.0, jnp.float32), zeros_m), mbs)
+            inv = 1.0 / tcfg.grad_accum
+            grads = jax.tree.map(lambda g: g * inv, grads)
+            loss = loss * inv
+            metrics = jax.tree.map(lambda m: m * inv, metrics)
+        else:
+            (loss, metrics), grads = grad_fn(params, batch, step)
+
+        # OBR (Eq. 10): batch-independent, applied once per step and only
+        # when the coefficient is live (static gate).
+        if qcfg.obr_lambda > 0.0:
+            lam = obr_lambda_schedule(step, tcfg.total_steps, qcfg.obr_lambda)
+            obr_val, obr_grads = jax.value_and_grad(
+                lambda p: total_obr_loss(quant_leaves(p, qcfg),
+                                         jnp.asarray(1.0, jnp.float32)))(params)
+            grads = jax.tree.map(lambda g, og: g + lam * og, grads, obr_grads)
+            loss = loss + lam * obr_val
+            metrics["loss_obr"] = obr_val
+            metrics["obr_lambda"] = lam
+        else:
+            metrics["loss_obr"] = jnp.zeros((), jnp.float32)
+            metrics["obr_lambda"] = jnp.zeros((), jnp.float32)
+
+        new_err = state["err"]
+        if tcfg.compress_grads:
+            grads, new_err = compress_tree(grads, state["err"])
+
+        if tcfg.lr_schedule == "linear":
+            lr = schedule.linear_warmup_decay(
+                step, peak=tcfg.adamw.lr_peak, warmup_steps=tcfg.warmup_steps,
+                total_steps=tcfg.total_steps)
+        else:
+            lr = schedule.warmup_cosine(
+                step, peak=tcfg.adamw.lr_peak, warmup_steps=tcfg.warmup_steps,
+                total_steps=tcfg.total_steps)
+
+        opt = adamw.AdamWState(state["mu"], state["nu"])
+        new_params, new_opt, opt_metrics = adamw.update(
+            grads, opt, params, step, lr, tcfg.adamw)
+
+        new_osc = state["osc"]
+        if qcfg.track_oscillation:
+            leaves = quant_leaves(new_params, qcfg)
+            new_osc = tuple(
+                update_osc_state(st, w, s, spec, momentum=qcfg.osc_momentum)
+                for st, (w, s, spec) in zip(state["osc"], leaves))
+            fracs = [oscillation_fraction(st, qcfg.osc_threshold)
+                     for st in new_osc]
+            metrics["osc_frac"] = jnp.mean(jnp.stack(fracs))
+
+        metrics.update({"loss": loss, "lr": lr, **opt_metrics})
+        new_state = {"params": new_params, "mu": new_opt.mu, "nu": new_opt.nu,
+                     "step": step + 1, "osc": new_osc, "err": new_err}
+        return new_state, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ArchConfig, qcfg: QuantConfig):
+    def eval_step(params, batch):
+        logits, _ = forward(params, batch, cfg, qcfg)
+        ce = hard_ce(logits, batch["labels"])
+        pred = jnp.argmax(logits, axis=-1)
+        acc = jnp.mean((pred == batch["labels"]).astype(jnp.float32))
+        return {"ce": ce, "acc": acc}
+    return eval_step

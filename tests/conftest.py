@@ -1,0 +1,17 @@
+import jax
+import numpy as np
+import pytest
+
+# Tests run on the single real CPU device; the 512-device dry-run sets its
+# own XLA_FLAGS in a separate process (never here — see dryrun.py).
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture
+def key():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,31 @@
+"""bf16 Adam moments: memory halves, convergence preserved."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import get_config, reduced_config
+from repro.core.policy import QuantConfig
+from repro.data.synthetic import DataConfig, sample_batch
+from repro.optim.adamw import AdamWConfig
+from repro.train.state import TrainConfig, init_state
+from repro.train.train_step import make_train_step
+
+CFG = reduced_config(get_config("qwen1.5-0.5b")).replace(n_layers=2)
+QCFG = QuantConfig(w_bits=4, a_bits=4, mode="mdq")
+DCFG = DataConfig(p_noise=0.05)
+
+
+def test_bf16_moments_train(key):
+    tcfg = TrainConfig(total_steps=60, warmup_steps=4,
+                       adamw=AdamWConfig(lr_peak=5e-3,
+                                         moments_dtype="bfloat16"))
+    state = init_state(key, CFG, QCFG, tcfg)
+    assert jax.tree.leaves(state["mu"])[0].dtype == jnp.bfloat16
+    step = jax.jit(make_train_step(CFG, QCFG, tcfg))
+    losses = []
+    for i in range(40):
+        state, m = step(state, sample_batch(CFG, DCFG, i, 16, 16))
+        losses.append(float(m["loss"]))
+    assert np.isfinite(losses).all()
+    assert losses[-1] < losses[0] * 0.75
+    assert jax.tree.leaves(state["mu"])[0].dtype == jnp.bfloat16

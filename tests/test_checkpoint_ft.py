@@ -1,0 +1,94 @@
+"""Checkpointing (atomic, async, elastic-reshard) + fault-tolerance hooks."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from repro.configs.registry import get_config, reduced_config
+from repro.core.policy import QuantConfig
+from repro.train import checkpoint as ckpt
+from repro.train.fault_tolerance import CheckpointManager, StragglerWatch
+from repro.train.state import TrainConfig, init_state
+
+CFG = reduced_config(get_config("qwen1.5-0.5b")).replace(n_layers=2)
+QCFG = QuantConfig(w_bits=4, a_bits=4, mode="mdq")
+TCFG = TrainConfig(total_steps=10)
+
+
+def _state(key):
+    return init_state(key, CFG, QCFG, TCFG)
+
+
+def test_roundtrip(tmp_path, key):
+    state = _state(key)
+    ckpt.save(str(tmp_path), state, 5)
+    assert ckpt.latest_step(str(tmp_path)) == 5
+    like = jax.eval_shape(lambda: state)
+    restored = ckpt.restore(str(tmp_path), like)
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        assert_allclose(np.asarray(a), np.asarray(b))
+
+
+def test_restore_with_shardings(tmp_path, key):
+    """Elastic path: restore with explicit (1-device) shardings."""
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+    state = _state(key)
+    ckpt.save(str(tmp_path), state, 1)
+    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    shardings = jax.tree.map(lambda _: NamedSharding(mesh, P()), state)
+    like = jax.eval_shape(lambda: state)
+    restored = ckpt.restore(str(tmp_path), like, shardings=shardings)
+    assert restored["params"]["embed"]["w"].sharding == NamedSharding(mesh, P())
+
+
+def test_keep_last_gc(tmp_path, key):
+    state = _state(key)
+    for s in (1, 2, 3, 4, 5):
+        ckpt.save(str(tmp_path), state, s, keep_last=2)
+    files = [f for f in os.listdir(tmp_path) if f.endswith(".npz")]
+    assert sorted(files) == ["ckpt_00000004.npz", "ckpt_00000005.npz"]
+
+
+def test_shape_mismatch_rejected(tmp_path, key):
+    state = _state(key)
+    ckpt.save(str(tmp_path), state, 1)
+    bad_cfg = CFG.replace(d_model=32)
+    bad = init_state(key, bad_cfg, QCFG, TCFG)
+    with pytest.raises((ValueError, KeyError)):
+        ckpt.restore(str(tmp_path), jax.eval_shape(lambda: bad))
+
+
+def test_async_checkpointer(tmp_path, key):
+    state = _state(key)
+    ac = ckpt.AsyncCheckpointer(str(tmp_path))
+    ac.submit(state, 3)
+    ac.wait()
+    assert ckpt.latest_step(str(tmp_path)) == 3
+
+
+def test_manager_restore_or_init(tmp_path, key):
+    mgr = CheckpointManager(str(tmp_path), save_every=2, async_io=False)
+    state, start = mgr.restore_or_init(lambda: _state(key),
+                                       jax.eval_shape(lambda: _state(key)))
+    assert start == 0
+    assert mgr.maybe_save(state, 2)
+    assert not mgr.maybe_save(state, 3)
+    state2, start2 = mgr.restore_or_init(lambda: _state(key),
+                                         jax.eval_shape(lambda: _state(key)))
+    assert start2 == 2
+    mgr.finalize()
+
+
+def test_straggler_watch(monkeypatch):
+    sw = StragglerWatch(ratio=2.0)
+    times = iter([0.0, 1.0, 2.0, 3.0, 10.0])
+    monkeypatch.setattr("time.monotonic", lambda: next(times))
+    assert not sw.tick()  # first call: no dt yet
+    assert not sw.tick()  # ema init (dt=1)
+    assert not sw.tick()  # dt=1 vs ema 1
+    assert not sw.tick()  # dt=1 vs ema 1
+    assert sw.tick()      # dt=7 vs ema ~1 -> straggler
+    assert sw.flags == 1

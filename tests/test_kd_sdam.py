@@ -1,0 +1,64 @@
+"""KD losses (Eq. 8-9) and SDAM (Tab. 2 metric)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from numpy.testing import assert_allclose
+
+from repro.core.kd import (hard_ce, kd_from_teacher_logits, make_topk_labels,
+                           mckd_loss, soft_ce, sparse_soft_ce)
+from repro.core.sdam import sdam, mean_sdam
+
+
+def test_soft_ce_with_onehot_equals_hard_ce(rng):
+    logits = jnp.asarray(rng.standard_normal((4, 7, 11)), jnp.float32)
+    labels = jnp.asarray(rng.integers(0, 11, (4, 7)))
+    onehot = jax.nn.one_hot(labels, 11)
+    assert_allclose(float(soft_ce(logits, onehot)), float(hard_ce(logits, labels)),
+                    rtol=1e-5)
+
+
+def test_kd_matches_soft_ce(rng):
+    s_logits = jnp.asarray(rng.standard_normal((3, 5, 8)), jnp.float32)
+    t_logits = jnp.asarray(rng.standard_normal((3, 5, 8)), jnp.float32)
+    want = soft_ce(s_logits, jax.nn.softmax(t_logits, -1))
+    got = kd_from_teacher_logits(s_logits, t_logits, temperature=1.0)
+    assert_allclose(float(got), float(want), rtol=1e-5)
+
+
+def test_sparse_topk_full_support_equals_dense(rng):
+    v = 10
+    s_logits = jnp.asarray(rng.standard_normal((2, 4, v)), jnp.float32)
+    t_logits = jnp.asarray(rng.standard_normal((2, 4, v)), jnp.float32)
+    idx, p = make_topk_labels(t_logits, v)  # K = V: exact
+    got = sparse_soft_ce(s_logits, idx, p)
+    want = soft_ce(s_logits, jax.nn.softmax(t_logits, -1))
+    assert_allclose(float(got), float(want), rtol=1e-4)
+
+
+def test_topk_probs_renormalized(rng):
+    t_logits = jnp.asarray(rng.standard_normal((2, 3, 50)), jnp.float32)
+    idx, p = make_topk_labels(t_logits, 5)
+    assert idx.shape == (2, 3, 5)
+    assert_allclose(np.asarray(jnp.sum(p, -1)), np.ones((2, 3)), rtol=1e-5)
+
+
+def test_mckd_averages_crops(rng):
+    m, v = 3, 12
+    s = jnp.asarray(rng.standard_normal((m, 2, 4, v)), jnp.float32)
+    t = jnp.asarray(rng.standard_normal((m, 2, 4, v)), jnp.float32)
+    idx, p = jax.vmap(lambda tl: make_topk_labels(tl, 4))(t)
+    got = float(mckd_loss(s, idx, p))
+    per = [float(sparse_soft_ce(s[i], idx[i], p[i])) for i in range(m)]
+    assert_allclose(got, np.mean(per), rtol=1e-5)
+
+
+def test_sdam_zero_for_identical_channels():
+    x = jnp.ones((16, 8)) * 3.0
+    assert float(sdam(x)) < 1e-7
+
+
+def test_sdam_detects_channel_variation(rng):
+    base = jnp.asarray(rng.standard_normal((256, 4)), jnp.float32)
+    spread = base * jnp.asarray([0.1, 1.0, 5.0, 10.0])
+    assert float(sdam(spread)) > float(sdam(base))
+    assert float(mean_sdam([base, spread])) > float(sdam(base)) / 2

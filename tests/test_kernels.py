@@ -1,0 +1,107 @@
+"""Pallas kernels vs. pure-jnp oracles: shape/dtype/bitwidth sweeps
+(interpret=True executes the kernel bodies on CPU)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from repro.core.quantizer import QuantSpec
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("shape", [(8, 16), (300, 700), (257, 129), (1, 640)])
+@pytest.mark.parametrize("bits", [2, 4, 8])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fake_quant_sweep(rng, shape, bits, dtype):
+    spec = QuantSpec(bits=bits)
+    x = jnp.asarray(rng.standard_normal(shape), dtype)
+    got = ops.fake_quant(x, 0.07, spec, interpret=True)
+    want = ref.fake_quant_2d(x, 0.07, q_n=spec.q_n, q_p=spec.q_p)
+    assert_allclose(np.asarray(got, np.float32), np.asarray(want, np.float32),
+                    rtol=1e-2, atol=1e-3)
+
+
+@pytest.mark.parametrize("bits", [2, 4])
+def test_fake_quant_offset(rng, bits):
+    spec = QuantSpec(bits=bits, signed=False, offset=True)
+    x = jnp.asarray(np.abs(rng.standard_normal((64, 96))), jnp.float32)
+    got = ops.fake_quant(x, 0.1, spec, offset=0.05, interpret=True)
+    want = ref.fake_quant_2d(x, 0.1, 0.05, q_n=spec.q_n, q_p=spec.q_p)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)
+
+
+@pytest.mark.parametrize("groups", [2, 6])
+def test_fake_quant_grouped(rng, groups):
+    spec = QuantSpec(bits=4, granularity="per_head")
+    x = jnp.asarray(rng.standard_normal((groups, 40, 24)), jnp.float32)
+    sc = jnp.asarray(np.abs(rng.standard_normal(groups)) * 0.1 + 0.02, jnp.float32)
+    got = ops.fake_quant_grouped(x, sc, spec, interpret=True)
+    want = ref.fake_quant_rows(x.reshape(groups, -1), sc.reshape(-1, 1),
+                               q_n=spec.q_n, q_p=spec.q_p).reshape(x.shape)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)
+
+
+@pytest.mark.parametrize("mkn", [(16, 32, 24), (37, 130, 90), (130, 512, 128),
+                                 (5, 700, 300)])
+@pytest.mark.parametrize("bits", [4, 8])
+def test_quant_matmul_sweep(rng, mkn, bits):
+    m, k, n = mkn
+    wspec = QuantSpec(bits=bits)
+    aspec = QuantSpec(bits=bits, signed=False, offset=True)
+    x = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((k, n)) * 0.05, jnp.float32)
+    ws = jnp.asarray(np.abs(rng.standard_normal(n)) * 0.02 + 0.01, jnp.float32)
+    got = ops.quant_matmul(x, w, 0.2, 0.05, ws, aspec, wspec, interpret=True)
+    want = ref.quant_matmul(x, w, 0.2, 0.05, ws.reshape(1, -1),
+                            q_n_a=aspec.q_n, q_p_a=aspec.q_p,
+                            q_n_w=wspec.q_n, q_p_w=wspec.q_p)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-2, atol=2e-3)
+
+
+def test_quant_matmul_batched_lead(rng):
+    """ops wrapper flattens leading dims."""
+    wspec = QuantSpec(bits=4)
+    aspec = QuantSpec(bits=4, signed=False, offset=True)
+    x = jnp.asarray(rng.standard_normal((2, 3, 64)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((64, 48)) * 0.05, jnp.float32)
+    got = ops.quant_matmul(x, w, 0.2, 0.0, 0.02, aspec, wspec, interpret=True)
+    assert got.shape == (2, 3, 48)
+
+
+@pytest.mark.parametrize("bits", [4, 8])
+def test_int_matmul(rng, bits):
+    wspec = QuantSpec(bits=bits)
+    x = jnp.asarray(rng.standard_normal((33, 80)), jnp.float32)
+    codes = jnp.asarray(rng.integers(-wspec.q_n, wspec.q_p + 1, (80, 56)), jnp.int8)
+    ws = jnp.asarray(np.abs(rng.standard_normal(56)) * 0.05 + 0.01, jnp.float32)
+    got = ops.int_matmul(x, codes, ws, wspec, interpret=True)
+    want = ref.int_matmul(x, codes, ws.reshape(1, -1), q_n_w=wspec.q_n,
+                          q_p_w=wspec.q_p)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-2, atol=2e-3)
+
+
+@pytest.mark.parametrize("shape", [(100, 33), (1000, 33), (513, 7), (64, 64)])
+@pytest.mark.parametrize("bits", [2, 3, 4, 8])
+def test_bin_stats_sweep(rng, shape, bits):
+    spec = QuantSpec(bits=bits)
+    w = jnp.asarray(rng.standard_normal(shape) * 0.3, jnp.float32)
+    got = ops.bin_stats(w, 0.1, spec, interpret=True)
+    want = ref.bin_stats_2d(w, 0.1, q_n=spec.q_n, q_p=spec.q_p)
+    assert got.shape == (3, spec.n_bins)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-2)
+    assert_allclose(float(jnp.sum(got[0])), w.size, rtol=1e-6)  # counts sum
+
+
+def test_bin_stats_matches_obr_moments(rng):
+    """Kernel histogram agrees with the OBR within-bin moments path."""
+    from repro.core.obr import per_bin_moments
+    from repro.core.quantizer import quantize_int
+    spec = QuantSpec(bits=3)
+    w = jnp.asarray(rng.standard_normal((128, 16)) * 0.2, jnp.float32)
+    s = jnp.asarray(0.08)
+    got = ops.bin_stats(w, s, spec, interpret=True)
+    codes = quantize_int(w, s, spec)
+    count, s1, s2 = per_bin_moments(w, codes, (), spec)
+    assert_allclose(np.asarray(got[0]), np.asarray(count), rtol=1e-6)
+    assert_allclose(np.asarray(got[1]), np.asarray(s1), rtol=1e-4, atol=1e-4)
+    assert_allclose(np.asarray(got[2]), np.asarray(s2), rtol=1e-4, atol=1e-4)

@@ -1,0 +1,91 @@
+"""Hypothesis property tests for the quantizer invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from repro.core.quantizer import QuantSpec, fake_quant, init_scale, quantize_int
+
+SETTINGS = dict(max_examples=40, deadline=None)
+
+arrays = st.lists(st.floats(-100, 100, allow_nan=False),
+                  min_size=1, max_size=64)
+bits = st.integers(2, 8)
+scales = st.floats(0.0001220703125, 10.0, allow_nan=False)  # 2^-13: f32-exact
+
+
+@given(arrays, bits, scales)
+@settings(**SETTINGS)
+def test_output_on_grid(vals, b, s):
+    """Every output is an integer multiple of s within [-Q_N s, Q_P s]."""
+    spec = QuantSpec(bits=b, grad_scale_mode="none")
+    x = jnp.asarray(vals, jnp.float32)
+    q = np.asarray(fake_quant(x, jnp.asarray(s, jnp.float32), spec))
+    codes = q / s
+    assert np.all(np.abs(codes - np.round(codes)) < 1e-3)
+    assert np.all(q >= -spec.q_n * s - 1e-4)
+    assert np.all(q <= spec.q_p * s + 1e-4)
+
+
+@given(arrays, bits, scales)
+@settings(**SETTINGS)
+def test_level_count(vals, b, s):
+    spec = QuantSpec(bits=b, grad_scale_mode="none")
+    x = jnp.asarray(vals, jnp.float32)
+    q = np.asarray(fake_quant(x, jnp.asarray(s, jnp.float32), spec))
+    assert len(np.unique(q)) <= 2 ** b
+
+
+@given(arrays, bits, scales)
+@settings(**SETTINGS)
+def test_idempotency(vals, b, s):
+    spec = QuantSpec(bits=b, grad_scale_mode="none")
+    x = jnp.asarray(vals, jnp.float32)
+    s = jnp.asarray(s, jnp.float32)
+    q1 = fake_quant(x, s, spec)
+    q2 = fake_quant(q1, s, spec)
+    assert_allclose(np.asarray(q2), np.asarray(q1), rtol=1e-5, atol=1e-6)
+
+
+@given(arrays, bits, scales)
+@settings(**SETTINGS)
+def test_monotone(vals, b, s):
+    """Quantization preserves (non-strict) order."""
+    spec = QuantSpec(bits=b, grad_scale_mode="none")
+    x = jnp.sort(jnp.asarray(vals, jnp.float32))
+    q = np.asarray(fake_quant(x, jnp.asarray(s, jnp.float32), spec))
+    assert np.all(np.diff(q) >= -1e-6)
+
+
+@given(arrays, bits, scales)
+@settings(**SETTINGS)
+def test_error_bound(vals, b, s):
+    """|x - q(x)| <= s/2 inside the representable range."""
+    spec = QuantSpec(bits=b, grad_scale_mode="none")
+    x = np.asarray(vals, np.float32)
+    q = np.asarray(fake_quant(jnp.asarray(x), jnp.asarray(s, jnp.float32), spec))
+    inside = (x > -spec.q_n * s) & (x < spec.q_p * s)
+    assert np.all(np.abs(x - q)[inside] <= s / 2 + 1e-5)
+
+
+@given(arrays, bits)
+@settings(**SETTINGS)
+def test_codes_in_range(vals, b):
+    spec = QuantSpec(bits=b)
+    x = jnp.asarray(vals, jnp.float32)
+    s = init_scale(x, spec)
+    codes = np.asarray(quantize_int(x, s, spec))
+    assert codes.min() >= -spec.q_n and codes.max() <= spec.q_p
+
+
+@given(arrays, bits, scales)
+@settings(**SETTINGS)
+def test_grad_defined_everywhere(vals, b, s):
+    """STE gradients are finite for any input/scale."""
+    spec = QuantSpec(bits=b)
+    x = jnp.asarray(vals, jnp.float32)
+    s = jnp.asarray(s, jnp.float32)
+    gx = jax.grad(lambda xx: jnp.sum(fake_quant(xx, s, spec)))(x)
+    gs = jax.grad(lambda ss: jnp.sum(fake_quant(x, ss, spec)))(s)
+    assert bool(jnp.all(jnp.isfinite(gx))) and bool(jnp.isfinite(gs))

@@ -1,0 +1,129 @@
+"""Unit tests: Eq. 5-7 quantizer identities, LSQ+ offsets, binary mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from repro.core.quantizer import (QuantSpec, fake_quant, init_scale,
+                                  quantize_int, dequantize_int, round_ste,
+                                  sign_ste, grad_scale, scale_grad_factor)
+
+
+def test_levels_eq5():
+    spec = QuantSpec(bits=3, signed=True)
+    assert spec.q_n == 4 and spec.q_p == 3 and spec.n_bins == 8
+    spec_u = QuantSpec(bits=3, signed=False)
+    assert spec_u.q_n == 0 and spec_u.q_p == 7
+
+
+def test_forward_matches_eq5(rng):
+    spec = QuantSpec(bits=4, grad_scale_mode="none")
+    x = jnp.asarray(rng.standard_normal((64, 32)), jnp.float32)
+    s = jnp.asarray(0.1)
+    got = fake_quant(x, s, spec)
+    want = 0.1 * np.clip(np.round(np.asarray(x) / 0.1), -8, 7)
+    assert_allclose(np.asarray(got), want, rtol=1e-6)
+
+
+def test_ste_gradient_eq6(rng):
+    """dL/dx = 1 inside the clip range, 0 outside (Eq. 6)."""
+    spec = QuantSpec(bits=3, grad_scale_mode="none")
+    x = jnp.asarray([-10.0, -0.35, 0.0, 0.21, 10.0])
+    s = jnp.asarray(0.1)  # range: [-0.4, 0.3]
+    g = jax.grad(lambda xx: jnp.sum(fake_quant(xx, s, spec)))(x)
+    assert_allclose(np.asarray(g), [0.0, 1.0, 1.0, 1.0, 0.0])
+
+
+def test_scale_gradient_eq7(rng):
+    """dx_q/ds = round(x/s) - x/s inside; -Q_N / Q_P at the rails (Eq. 7)."""
+    spec = QuantSpec(bits=3, grad_scale_mode="none")
+    s = jnp.asarray(0.1)
+    for xv in (-10.0, -0.17, 0.02, 0.26, 7.0):
+        g = jax.grad(lambda ss: jnp.sum(fake_quant(jnp.asarray([xv]), ss, spec)))(s)
+        r = xv / 0.1
+        if r <= -4:
+            want = -4.0
+        elif r >= 3:
+            want = 3.0
+        else:
+            want = np.round(r) - r
+        assert_allclose(float(g), want, rtol=1e-5, atol=1e-6)
+
+
+def test_offset_lsqplus(rng):
+    spec = QuantSpec(bits=4, signed=False, offset=True, grad_scale_mode="none")
+    x = jnp.asarray(rng.standard_normal((32,)) + 3.0, jnp.float32)
+    s, b = jnp.asarray(0.5), jnp.asarray(2.0)
+    got = fake_quant(x, s, spec, offset=b)
+    want = 0.5 * np.clip(np.round((np.asarray(x) - 2.0) / 0.5), 0, 15) + 2.0
+    assert_allclose(np.asarray(got), want, rtol=1e-6)
+
+
+def test_binary_sign(rng):
+    spec = QuantSpec(bits=1, grad_scale_mode="none")
+    x = jnp.asarray(rng.standard_normal((128,)), jnp.float32)
+    s = jnp.asarray(0.7)
+    got = fake_quant(x, s, spec)
+    want = np.where(np.asarray(x) >= 0, 0.7, -0.7)
+    assert_allclose(np.asarray(got), want, rtol=1e-6)
+    # clipped STE window
+    g = jax.grad(lambda xx: jnp.sum(fake_quant(xx, s, spec)))(
+        jnp.asarray([-2.0, -0.3, 0.3, 2.0]))
+    assert_allclose(np.asarray(g), [0.0, 1.0, 1.0, 0.0])
+
+
+def test_quantize_dequantize_roundtrip(rng):
+    spec = QuantSpec(bits=4)
+    x = jnp.asarray(rng.standard_normal((16, 8)), jnp.float32)
+    s = init_scale(x, spec)
+    codes = quantize_int(x, s, spec)
+    assert codes.dtype == jnp.int8
+    assert int(codes.min()) >= -8 and int(codes.max()) <= 7
+    deq = dequantize_int(codes, s, spec)
+    assert_allclose(np.asarray(deq), np.asarray(fake_quant(
+        x, s, QuantSpec(bits=4, grad_scale_mode="none"))), rtol=1e-5)
+
+
+def test_module_l1_grad_scale(rng):
+    """g = 1/sqrt(Q_P * ||w||_1) per group (Sec. 4.4.1)."""
+    spec = QuantSpec(bits=4, granularity="per_head", grad_scale_mode="module_l1")
+    w = jnp.asarray(rng.standard_normal((8, 4, 16)), jnp.float32)
+    g = scale_grad_factor(spec, w, (1, 4, 1))
+    l1 = np.sum(np.abs(np.asarray(w)), axis=(0, 2), keepdims=True)
+    assert_allclose(np.asarray(g), 1.0 / np.sqrt(7 * l1), rtol=1e-5)
+
+
+def test_grad_scale_identity_forward(rng):
+    x = jnp.asarray(rng.standard_normal((8,)), jnp.float32)
+    y = grad_scale(x, jnp.asarray(0.25))
+    assert_allclose(np.asarray(y), np.asarray(x), rtol=1e-7)
+    g = jax.grad(lambda xx: jnp.sum(grad_scale(xx, jnp.asarray(0.25))))(x)
+    assert_allclose(np.asarray(g), 0.25 * np.ones(8), rtol=1e-6)
+
+
+def test_round_sign_ste():
+    x = jnp.asarray([0.4, 0.6, -0.4])
+    assert_allclose(np.asarray(round_ste(x)), [0.0, 1.0, 0.0])
+    g = jax.grad(lambda xx: jnp.sum(round_ste(xx)))(x)
+    assert_allclose(np.asarray(g), [1.0, 1.0, 1.0])
+    assert_allclose(np.asarray(sign_ste(x)), [1.0, 1.0, -1.0])
+
+
+def test_init_scale_grouped(rng):
+    spec = QuantSpec(bits=4, granularity="per_head")
+    w = jnp.asarray(rng.standard_normal((8, 4, 16)), jnp.float32)
+    s = init_scale(w, spec, group_axes=(1,))
+    assert s.shape == (1, 4, 1)
+    want = 2 * np.mean(np.abs(np.asarray(w)), axis=(0, 2), keepdims=True) / np.sqrt(7)
+    assert_allclose(np.asarray(s), want, rtol=1e-5)
+
+
+@pytest.mark.parametrize("bits", [2, 3, 4, 8])
+def test_bits_sweep_idempotent(rng, bits):
+    spec = QuantSpec(bits=bits, grad_scale_mode="none")
+    x = jnp.asarray(rng.standard_normal((64,)), jnp.float32)
+    s = init_scale(x, spec)
+    q1 = fake_quant(x, s, spec)
+    q2 = fake_quant(q1, s, spec)
+    assert_allclose(np.asarray(q2), np.asarray(q1), rtol=1e-6)
