@@ -1,31 +1,47 @@
-"""Kernel micro-benchmarks: Pallas (interpret) vs pure-jnp composition.
+"""Kernel micro-benchmarks: fused Pallas paths vs the pure-jnp composition.
 
 On CPU the interpret-mode timing is NOT the TPU story — the structural
-deliverable here is the HBM-traffic model: we report the bytes each path
-moves (from the loop-aware HLO analysis) so the fusion win is quantified
-hardware-independently.
+deliverable here is the HBM-traffic model: the unfused composition's bytes
+come from the loop-aware HLO analysis (hlo_cost.analyze), the fused kernels'
+bytes from the compiled program's ENTRY boundary (hlo_cost.entry_boundary_
+bytes — inputs once + outputs once, the exact HBM traffic of a single-pass
+kernel). Covers the QAT forward, the custom_vjp backward (both Pallas
+backward kernels), and the serving int8/packed-int4 matmuls.
+
+`main()` emits BENCH_kernels.json next to the cwd for CI/report tooling.
 """
 from __future__ import annotations
 
+import json
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.quantizer import QuantSpec
+from repro.core.quantizer import (QuantSpec, fake_quant, grad_scale,
+                                  pack_int4, scale_grad_factor)
 from repro.kernels import ops, ref
+from repro.kernels import quant_matmul as qmm
 from repro.launch import hlo_cost
+
+M, K, N = 256, 1024, 512  # tile-multiple QAT hot-path shape
 
 
 def _bytes_of(fn, *args):
+    """Loop-aware HBM bytes of the (unfused) compiled composition."""
     compiled = jax.jit(fn).lower(*args).compile()
     return hlo_cost.analyze(compiled.as_text())["bytes"]
 
 
+def _boundary_bytes(fn, *args):
+    """ENTRY params + outputs — the fused single-pass traffic model."""
+    compiled = jax.jit(fn).lower(*args).compile()
+    return hlo_cost.entry_boundary_bytes(compiled.as_text())["bytes"]
+
+
 def _time(fn, *args, iters=3):
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
-        jax.block_until_ready(fn(*args))
+    jax.block_until_ready(fn(*args))  # single warmup call compiles once
     t0 = time.monotonic()
     for _ in range(iters):
         jax.block_until_ready(fn(*args))
@@ -34,36 +50,130 @@ def _time(fn, *args, iters=3):
 
 def run():
     rng = np.random.default_rng(0)
-    m, k, n = 256, 1024, 512
     wspec = QuantSpec(bits=4)
     aspec = QuantSpec(bits=4, signed=False, offset=True)
-    x = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
-    w = jnp.asarray(rng.standard_normal((k, n)) * 0.05, jnp.float32)
-    ws = jnp.asarray(np.abs(rng.standard_normal(n)) * 0.02 + 0.01, jnp.float32)
+    x = jnp.asarray(rng.standard_normal((M, K)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((K, N)) * 0.05, jnp.float32)
+    ws = jnp.asarray(np.abs(rng.standard_normal(N)) * 0.02 + 0.01, jnp.float32)
+    a_s = jnp.asarray(0.2, jnp.float32)
+    a_b = jnp.asarray(0.05, jnp.float32)
 
-    unfused = lambda: ref.quant_matmul(x, w, 0.2, 0.05, ws.reshape(1, -1),
-                                       q_n_a=aspec.q_n, q_p_a=aspec.q_p,
-                                       q_n_w=wspec.q_n, q_p_w=wspec.q_p)
-    unfused_bytes = _bytes_of(lambda a, b: ref.quant_matmul(
-        a, b, 0.2, 0.05, ws.reshape(1, -1), q_n_a=aspec.q_n, q_p_a=aspec.q_p,
-        q_n_w=wspec.q_n, q_p_w=wspec.q_p), x, w)
-    # fused kernel boundary traffic: inputs once + output once
-    fused_bytes = (x.size * 4 + w.size * 4 + n * 4 + m * n * 4)
+    # ---- QAT forward -------------------------------------------------------
+    def unfused_fwd(x, w, a_s, a_b, ws):
+        return ref.quant_matmul(x, w, a_s, a_b, ws.reshape(1, -1),
+                                q_n_a=aspec.q_n, q_p_a=aspec.q_p,
+                                q_n_w=wspec.q_n, q_p_w=wspec.q_p)
 
-    t_unfused = _time(lambda: unfused())
-    t_fused = _time(lambda: ops.quant_matmul(x, w, 0.2, 0.05, ws, aspec, wspec,
-                                             interpret=True))
+    def fused_fwd(x, w, a_s, a_b, ws):
+        return ops.fused_qat_matmul(x, w, a_s, a_b, ws, aspec, wspec,
+                                    interpret=True)
 
+    fwd_unfused_bytes = _bytes_of(unfused_fwd, x, w, a_s, a_b, ws)
+    fwd_fused_bytes = _boundary_bytes(
+        lambda x, w, a_s, a_b, ws: qmm.quant_matmul(
+            x, w, a_s, a_b, ws.reshape(1, -1), q_n_a=aspec.q_n,
+            q_p_a=aspec.q_p, q_n_w=wspec.q_n, q_p_w=wspec.q_p,
+            interpret=True),
+        x, w, a_s, a_b, ws)
+    t_fwd_unfused = _time(unfused_fwd, x, w, a_s, a_b, ws)
+    t_fwd_fused = _time(fused_fwd, x, w, a_s, a_b, ws)
+
+    # ---- QAT backward (custom_vjp: dX, dW + scale/offset reductions) -------
+    def unfused_loss(x, w, a_s, a_b, ws):
+        ref_w = jax.lax.stop_gradient(w)
+        xq = fake_quant(x, a_s, aspec, offset=a_b, grad_scale_ref=ref_w)
+        wd = fake_quant(w, ws.reshape(1, -1), wspec)
+        y = jnp.einsum("mk,kn->mn", xq.astype(jnp.bfloat16),
+                       wd.astype(jnp.bfloat16))
+        return jnp.sum(y.astype(jnp.float32))
+
+    def fused_loss(x, w, a_s, a_b, ws):
+        ref_w = jax.lax.stop_gradient(w)
+        g_a = scale_grad_factor(aspec, ref_w, ())
+        g_w = scale_grad_factor(wspec, ref_w, (1, N))
+        y = ops.fused_qat_matmul(
+            x, w, grad_scale(a_s, g_a), grad_scale(a_b, g_a),
+            grad_scale(ws.reshape(1, -1), g_w).reshape(-1),
+            aspec, wspec, interpret=True)
+        return jnp.sum(y)
+
+    unfused_grad = jax.grad(unfused_loss, argnums=(0, 1, 2, 3, 4))
+    fused_grad = jax.grad(fused_loss, argnums=(0, 1, 2, 3, 4))
+    bwd_unfused_bytes = _bytes_of(unfused_grad, x, w, a_s, a_b, ws)
+    dy = jnp.ones((M, N), jnp.float32)
+    wcols = ws.reshape(1, -1)
+    kw = dict(q_n_a=aspec.q_n, q_p_a=aspec.q_p, q_n_w=wspec.q_n,
+              q_p_w=wspec.q_p, interpret=True)
+    bwd_fused_bytes = (
+        _boundary_bytes(lambda dy, x, w, a_s, a_b, ws:
+                        qmm.quant_matmul_dx(dy, x, w, a_s, a_b, ws, **kw),
+                        dy, x, w, a_s, a_b, wcols)
+        + _boundary_bytes(lambda dy, x, w, a_s, a_b, ws:
+                          qmm.quant_matmul_dw(dy, x, w, a_s, a_b, ws, **kw),
+                          dy, x, w, a_s, a_b, wcols))
+    t_bwd_unfused = _time(unfused_grad, x, w, a_s, a_b, ws)
+    t_bwd_fused = _time(fused_grad, x, w, a_s, a_b, ws)
+
+    # ---- serving: int8 codes vs nibble-packed int4 -------------------------
+    codes = jnp.asarray(rng.integers(-wspec.q_n, wspec.q_p + 1, (K, N)),
+                        jnp.int8)
+    packed = pack_int4(codes, 0)
+
+    def unfused_serving(x, codes, ws):
+        wd = codes.astype(jnp.bfloat16) * ws.reshape(1, -1).astype(jnp.bfloat16)
+        return jnp.einsum("mk,kn->mn", x.astype(jnp.bfloat16), wd)
+
+    serving_unfused_bytes = _bytes_of(unfused_serving, x, codes, ws)
+    int8_kernel_bytes = _boundary_bytes(
+        lambda x, c, ws: qmm.int_matmul(x, c, ws.reshape(1, -1),
+                                        q_n_w=wspec.q_n, q_p_w=wspec.q_p,
+                                        interpret=True),
+        x, codes, ws)
+    int4_kernel_bytes = _boundary_bytes(
+        lambda x, c, ws: qmm.int4_matmul(x, c, ws.reshape(1, -1),
+                                         interpret=True),
+        x, packed, ws)
+    t_int8 = _time(lambda: ops.int_matmul(x, codes, ws, wspec, interpret=True))
+    t_int4 = _time(lambda: ops.int_matmul(x, packed, ws, wspec, packed=True,
+                                          interpret=True))
+
+    # ---- standalone kernels ------------------------------------------------
     wq = jnp.asarray(rng.standard_normal((4096, 1024)) * 0.1, jnp.float32)
     t_fq = _time(lambda: ops.fake_quant(wq, 0.05, wspec, interpret=True))
     t_bs = _time(lambda: ops.bin_stats(wq, 0.05, wspec, interpret=True))
 
     return {
-        "quant_matmul_unfused_us": t_unfused,
-        "quant_matmul_pallas_interpret_us": t_fused,
-        "unfused_hbm_bytes": unfused_bytes,
-        "fused_hbm_bytes_model": fused_bytes,
-        "hbm_traffic_reduction": unfused_bytes / fused_bytes,
+        "shape": {"m": M, "k": K, "n": N, "w_bits": 4, "a_bits": 4},
+        "qat_fwd": {
+            "unfused_hbm_bytes": fwd_unfused_bytes,
+            "fused_hbm_bytes": fwd_fused_bytes,
+            "reduction": fwd_unfused_bytes / fwd_fused_bytes,
+            "unfused_us": t_fwd_unfused,
+            "fused_interpret_us": t_fwd_fused,
+        },
+        "qat_bwd": {
+            "unfused_hbm_bytes": bwd_unfused_bytes,
+            "fused_hbm_bytes": bwd_fused_bytes,
+            "reduction": bwd_unfused_bytes / bwd_fused_bytes,
+            "unfused_us": t_bwd_unfused,
+            "fused_interpret_us": t_bwd_fused,
+        },
+        "serving_int4": {
+            "unfused_hbm_bytes": serving_unfused_bytes,
+            "int8_kernel_hbm_bytes": int8_kernel_bytes,
+            "int4_kernel_hbm_bytes": int4_kernel_bytes,
+            "weight_bytes_int8": K * N,
+            "weight_bytes_int4": K * N // 2,
+            "weight_traffic_reduction": (K * N) / (K * N // 2),
+            "int8_interpret_us": t_int8,
+            "int4_interpret_us": t_int4,
+        },
+        # legacy flat keys (benchmarks/run.py and older reports)
+        "quant_matmul_unfused_us": t_fwd_unfused,
+        "quant_matmul_pallas_interpret_us": t_fwd_fused,
+        "unfused_hbm_bytes": fwd_unfused_bytes,
+        "fused_hbm_bytes_model": fwd_fused_bytes,
+        "hbm_traffic_reduction": fwd_unfused_bytes / fwd_fused_bytes,
         "fake_quant_interpret_us": t_fq,
         "bin_stats_interpret_us": t_bs,
     }
@@ -71,10 +181,17 @@ def run():
 
 def main():
     r = run()
-    for k, v in r.items():
-        print(f"{k:36s} {v:,.1f}")
-    print(f"# fused quant-matmul moves {r['hbm_traffic_reduction']:.1f}x fewer "
-          f"HBM bytes than the unfused composition (structural, CPU-measured)")
+    for sect in ("qat_fwd", "qat_bwd", "serving_int4"):
+        print(f"[{sect}]")
+        for k, v in r[sect].items():
+            print(f"  {k:32s} {v:,.1f}")
+    print(f"# fused QAT fwd moves {r['qat_fwd']['reduction']:.1f}x fewer HBM "
+          f"bytes, bwd {r['qat_bwd']['reduction']:.1f}x; packed int4 halves "
+          f"serving weight reads "
+          f"({r['serving_int4']['weight_traffic_reduction']:.1f}x) "
+          f"(structural, CPU-measured)")
+    with open("BENCH_kernels.json", "w") as f:
+        json.dump(r, f, indent=2, sort_keys=True)
     return r
 
 

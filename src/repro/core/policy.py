@@ -55,6 +55,11 @@ class QuantConfig:
     osc_threshold: float = 0.005
     # Serving-time KV cache quantization (beyond-paper; 0 = fp16/bf16 cache).
     kv_cache_bits: int = 0
+    # Fused Pallas quant-matmul dispatch (kernels/quant_matmul custom_vjp):
+    #   "auto": fused on TPU, pure-jnp composition elsewhere
+    #   "on":   force fused (interpret-mode Pallas on CPU — used by tests)
+    #   "off":  force the unfused pure-jnp composition
+    fused_matmul: str = "auto"
     # Sensitivity-analysis overrides (Tab. 1 / Tab. 9 harness):
     #   fp_kinds:   module kinds forced to full precision (leave-one-out)
     #   only_kinds: if set, ONLY these kinds are quantized (quantize-one-only)

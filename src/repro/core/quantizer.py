@@ -202,6 +202,35 @@ def dequantize_int(codes: jax.Array, scale: jax.Array, spec: QuantSpec,
     return out
 
 
+def pack_int4(codes: jax.Array, axis: int = 0) -> jax.Array:
+    """Pack codes in [-8, 7] two-per-int8-byte along ``axis`` (even size).
+
+    Byte p holds code 2p in the low nibble and code 2p+1 in the high nibble
+    (two's complement), matching the tile-wise unpack in
+    kernels/quant_matmul.int4_matmul. Any spec with bits <= 4 fits.
+    """
+    axis = axis % codes.ndim
+    size = codes.shape[axis]
+    if size % 2:
+        raise ValueError(f"pack axis {axis} has odd size {size}")
+    even = jax.lax.slice_in_dim(codes, 0, size, 2, axis).astype(jnp.int32)
+    odd = jax.lax.slice_in_dim(codes, 1, size, 2, axis).astype(jnp.int32)
+    b = (even & 15) | ((odd & 15) << 4)
+    return jnp.where(b > 127, b - 256, b).astype(jnp.int8)
+
+
+def unpack_int4(packed: jax.Array, axis: int = 0) -> jax.Array:
+    """Inverse of pack_int4: (..., S/2, ...) int8 bytes -> (..., S, ...) codes."""
+    axis = axis % packed.ndim
+    p32 = packed.astype(jnp.int32)
+    lo = ((p32 << 28) >> 28).astype(jnp.int8)
+    hi = ((p32 << 24) >> 28).astype(jnp.int8)
+    st = jnp.stack([lo, hi], axis=axis + 1)
+    shape = list(packed.shape)
+    shape[axis] *= 2
+    return st.reshape(shape)
+
+
 def init_scale(w: jax.Array, spec: QuantSpec,
                group_axes: tuple[int, ...] = ()) -> jax.Array:
     """LSQ init: s = 2*mean(|w|)/sqrt(Q_P), per scale group.

@@ -1,0 +1,1 @@
+"""Distribution: sharding rules for params/state/cache/batches."""

@@ -1,0 +1,266 @@
+"""Production sharding rules: FSDP + TP + EP over a (pod, data, model) mesh.
+
+Name-driven, shape-checked: each quantizable linear's role (NAME2KIND in
+models/common.py) picks the rule, and every axis assignment is guarded by a
+divisibility check against the mesh — an axis that doesn't divide simply
+replicates, so the same rules cover every (arch x mesh) cell of the dry-run
+sweep without per-model configuration.
+
+Rules (derived from the layouts in models/):
+  * q/k/v projections (d, h, hd):   d -> data (FSDP), heads -> model (TP)
+  * o projections   (h, hd, d):     heads -> model (row-parallel), d -> data
+  * ffn in/gate     (d, f):         column-parallel  P(data, model)
+  * ffn out         (f, d):         row-parallel     P(model, data)
+  * MoE experts     (E, din, dout): experts -> model (EP) when E divides,
+                                    else TP on the ffn axis within experts
+  * embed           (V, d):         vocab -> model only (no FSDP d-axis —
+                                    multi-pod gather pathology, Perf-2)
+  * lm_head         (d, V):         P(data, model)
+  * scales:         inherit the sharded axes of their weight where the
+                    group axis matches (per-head scale shards with heads)
+  * KV caches:      batch -> data axes, SEQUENCE -> model (decode-time
+                    sequence sharding; attention reduces over it)
+
+Leading vmap-stacked (scan) axes are never sharded. `no_tp` turns the model
+axis into extra data parallelism (weights replicated across it).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.common import NAME2KIND
+from repro.models.model import quant_leaves_named
+
+# Weight-name role sets (see models/common.py layouts).
+_QKV = {"wq", "wk", "wv", "xq", "xk", "xv", "mq", "mk", "mv"}  # (d, h, hd)
+_OUT_HEAD = {"wo", "xo"}                                       # (h, hd, d)
+_ROW = {"w_out", "m_down", "g_out"}                            # (f, d)
+_MOE = {"moe_in", "moe_gate", "moe_out"}                       # (E, din, dout)
+_BASE_RANK = {**dict.fromkeys(_QKV | _OUT_HEAD | _MOE, 3)}     # default 2
+
+
+def _sizes(mesh) -> dict:
+    return dict(mesh.shape)
+
+
+def _div(dim: int, mesh, axis: str) -> bool:
+    n = _sizes(mesh).get(axis, 0)
+    return n > 0 and dim % n == 0
+
+
+def batch_axes(mesh) -> tuple:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def weight_pspec(name: str, shape, mesh, fsdp: bool = True,
+                 tp: bool = True) -> P:
+    """PartitionSpec for one (possibly vmap-stacked) weight of a named linear."""
+    shape = tuple(shape)
+    base = _BASE_RANK.get(name, 2)
+    lead = (None,) * (len(shape) - base)
+    core = shape[-base:]
+
+    def d(dim):  # FSDP assignment
+        return "data" if fsdp and _div(dim, mesh, "data") else None
+
+    def m(dim):  # TP assignment
+        return "model" if tp and _div(dim, mesh, "model") else None
+
+    if name == "embed":
+        return P(m(core[0]), d(core[1]))
+    if name in _QKV:
+        return P(*lead, d(core[0]), m(core[1]), None)
+    if name in _OUT_HEAD:
+        return P(*lead, m(core[0]), None, d(core[2]))
+    if name in _MOE:
+        e, din, dout = core
+        if tp and _div(e, mesh, "model"):
+            return P(*lead, "model", d(din), None)       # expert parallel
+        if name == "moe_out":
+            return P(*lead, None, m(din), d(dout))       # row-parallel TP
+        return P(*lead, None, d(din), m(dout))           # col-parallel TP
+    if name in _ROW:
+        return P(*lead, m(core[0]), d(core[1]))
+    # default: column-parallel 2D (ffn in/gate, gates, heads, router, ...)
+    return P(*lead, d(core[0]), m(core[1]))
+
+
+def _scale_pspec(scale_shape, w_shape, wspec: P) -> P:
+    """Scale axes of size > 1 shard with the matching weight axis."""
+    scale_shape = tuple(scale_shape)
+    if len(scale_shape) != len(tuple(w_shape)):
+        return P()  # 0-d, or stacked per-tensor (G,): replicate
+    wtuple = tuple(wspec) + (None,) * (len(w_shape) - len(tuple(wspec)))
+    entries = [wtuple[i] if (s > 1 and s == w_shape[i]) else None
+               for i, s in enumerate(scale_shape)]
+    return P(*entries)
+
+
+def _linear_pspecs(name: str, sub: dict, mesh, no_tp: bool) -> dict:
+    wkey = "w" if "w" in sub else ("codes" if "codes" in sub else "codes4")
+    w = sub[wkey]
+    wspec = weight_pspec(name, w.shape, mesh, fsdp=(name != "embed"),
+                         tp=not no_tp)
+    out = {wkey: wspec}
+    if "w_scale" in sub:
+        out["w_scale"] = _scale_pspec(sub["w_scale"].shape, w.shape, wspec)
+    for k in sub:
+        if k not in out:
+            out[k] = P()  # biases, activation quantizer params
+    return out
+
+
+def param_pspecs(params, mesh, no_tp: bool = False):
+    """PartitionSpec tree mirroring a params (or moments/error) tree."""
+
+    def walk(node):
+        if isinstance(node, dict):
+            out = {}
+            for name, child in node.items():
+                if (isinstance(child, dict) and name in NAME2KIND
+                        and ("w" in child or "codes" in child
+                             or "codes4" in child)):
+                    out[name] = _linear_pspecs(name, child, mesh, no_tp)
+                else:
+                    out[name] = walk(child)
+            return out
+        if isinstance(node, (tuple, list)):
+            return type(node)(walk(c) for c in node)
+        return P()
+
+    return walk(params)
+
+
+def state_pspecs(state: dict, mesh, qcfg, no_tp: bool = False) -> dict:
+    """Spec tree for the full train state (params + moments + telemetry)."""
+    specs = {
+        "params": param_pspecs(state["params"], mesh, no_tp),
+        "mu": param_pspecs(state["mu"], mesh, no_tp),
+        "nu": param_pspecs(state["nu"], mesh, no_tp),
+        "step": P(),
+    }
+    osc = state.get("osc", ())
+    if osc:
+        leaves = quant_leaves_named(state["params"], qcfg)
+        osc_specs = []
+        for (name, w, _sc, _spec), st in zip(leaves, osc):
+            wspec = weight_pspec(name, w.shape, mesh, tp=not no_tp)
+            osc_specs.append(jax.tree.map(
+                lambda leaf, ws=wspec, wsh=tuple(w.shape):
+                    ws if tuple(leaf.shape) == wsh else P(),
+                st))
+        specs["osc"] = tuple(osc_specs)
+    else:
+        specs["osc"] = ()
+    err = state.get("err", ())
+    if isinstance(err, tuple) and not err:
+        specs["err"] = ()
+    else:
+        specs["err"] = param_pspecs(err, mesh, no_tp)
+    return specs
+
+
+def batch_pspecs(batch, mesh, extra_model_dp: bool = False):
+    """Shard the batch (leading) axis over the data axes when divisible."""
+    axes = list(batch_axes(mesh)) + (["model"] if extra_model_dp else [])
+    sizes = _sizes(mesh)
+
+    def prod(use):
+        n = 1
+        for a in use:
+            n *= sizes.get(a, 1)
+        return n
+
+    def one(a):
+        use = axes[:]
+        while use and a.shape[0] % prod(use):
+            use.pop()
+        if not use:
+            return P(*([None] * a.ndim))
+        return P(tuple(use), *([None] * (a.ndim - 1)))
+
+    return jax.tree.map(one, batch)
+
+
+def cache_pspecs(cache, mesh):
+    """Decode-cache specs: batch -> data axes, KV sequence axis -> model."""
+    bt = batch_axes(mesh)
+    sizes = _sizes(mesh)
+    nb = 1
+    for a in bt:
+        nb *= sizes.get(a, 1)
+
+    def arr(a, stacked: bool, seq_axis: int | None = None):
+        lead = (None,) if stacked else ()
+        off = len(lead)
+        entries = [None] * a.ndim
+        if a.ndim > off and a.shape[off] % nb == 0 and bt:
+            entries[off] = bt
+        if (seq_axis is not None and a.ndim > off + seq_axis
+                and _div(a.shape[off + seq_axis], mesh, "model")):
+            entries[off + seq_axis] = "model"
+        return P(*entries[:len(lead)], *entries[len(lead):])
+
+    def walk(node, stacked: bool):
+        from repro.models.attention import KVCache
+        if isinstance(node, KVCache):
+            return KVCache(
+                k=arr(node.k, stacked, seq_axis=1),
+                v=arr(node.v, stacked, seq_axis=1),
+                k_scale=None if node.k_scale is None
+                else arr(node.k_scale, stacked, seq_axis=1),
+                v_scale=None if node.v_scale is None
+                else arr(node.v_scale, stacked, seq_axis=1),
+                pos=arr(node.pos, stacked, seq_axis=1),
+            )
+        if isinstance(node, dict):
+            return {k: walk(v, stacked) for k, v in node.items()}
+        if isinstance(node, (tuple, list)):
+            return type(node)(walk(c, stacked) for c in node)
+        if node is None:
+            return None
+        return arr(node, stacked)
+
+    return {"groups": walk(cache.get("groups", ()), True),
+            "tail": walk(cache.get("tail", ()), False)}
+
+
+def named_tree(specs, mesh):
+    """PartitionSpec tree -> NamedSharding tree over ``mesh``."""
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def make_constrains(mesh, extra_model_dp: bool = False):
+    """(constrain, logits_constrain) for with_sharding_constraint inside jit.
+
+    constrain pins residual activations' batch axis to the data axes;
+    logits_constrain additionally pins the vocab axis to model (the lm_head
+    is column-parallel). Non-divisible shapes pass through unconstrained.
+    """
+    bt = tuple(batch_axes(mesh)) + (("model",) if extra_model_dp else ())
+    sizes = _sizes(mesh)
+    nb = 1
+    for a in bt:
+        nb *= sizes.get(a, 1)
+    model_ok = not extra_model_dp and "model" in mesh.axis_names
+
+    def constrain(x):
+        if not bt or x.ndim < 1 or x.shape[0] % nb:
+            return x
+        spec = P(bt, *([None] * (x.ndim - 1)))
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+    def logits_constrain(x):
+        entries = [None] * x.ndim
+        if bt and x.ndim >= 1 and x.shape[0] % nb == 0:
+            entries[0] = bt
+        if model_ok and x.ndim >= 2 and _div(x.shape[-1], mesh, "model"):
+            entries[-1] = "model"
+        if all(e is None for e in entries):
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, P(*entries)))
+
+    return constrain, logits_constrain

@@ -3,8 +3,18 @@
 Handle arbitrary-rank tensors (reshape to 2D, pad to tile multiples, unpad),
 QuantSpec plumbing, and the interpret flag (True on CPU; False on real TPU —
 `on_tpu()` picks automatically).
+
+`fused_qat_matmul` is the differentiable entry point: a jax.custom_vjp whose
+forward AND backward are single Pallas kernels (one HBM round trip each),
+with the LSQ/LSQ+ gradients (Eq. 6-7) recomputed tile-wise in VMEM. The
+module-wise gradient scale g and per-group scale reductions are applied
+OUTSIDE the vjp boundary (via core.quantizer.grad_scale and a differentiable
+broadcast of the scale to per-column form), exactly mirroring
+core.quantizer.fake_quant's composition.
 """
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -75,15 +85,33 @@ def quant_matmul(x, w, a_scale, a_offset, w_scale, a_spec: QuantSpec,
     return out[:m, :n].reshape(*lead, n)
 
 
-def int_matmul(x, w_codes, w_scale, w_spec: QuantSpec, *, interpret=None,
-               out_dtype=jnp.float32):
-    """Serving matmul over int8-coded weights (1 byte/weight HBM reads)."""
+def int_matmul(x, w_codes, w_scale, w_spec: QuantSpec, *, packed: bool = False,
+               interpret=None, out_dtype=jnp.float32):
+    """Serving matmul over int-coded weights.
+
+    packed=False: w_codes (K, N) int8 — 1 byte/weight HBM reads.
+    packed=True:  w_codes (K//2, N) int8 nibble-packed int4 pairs (see
+    core.quantizer.pack_int4) — 0.5 byte/weight, unpacked tile-wise in VMEM.
+    """
     interpret = (not on_tpu()) if interpret is None else interpret
     lead = x.shape[:-1]
     k = x.shape[-1]
     n = w_codes.shape[-1]
     x2 = x.reshape(-1, k)
     bm, bn, bk = _qmm.DEFAULT_TILES
+    if packed:
+        assert w_codes.shape[0] * 2 == k, (x.shape, w_codes.shape)
+        bk = min(bk, k)
+        x2p, m, _ = _pad2d(x2, bm, bk)
+        pad_rows = (x2p.shape[1] - k) // 2
+        pn = (-n) % bn
+        wp = jnp.pad(w_codes, ((0, pad_rows), (0, pn)))
+        ws = jnp.broadcast_to(jnp.asarray(w_scale, jnp.float32).reshape(1, -1),
+                              (1, n))
+        wsp = jnp.pad(ws, ((0, 0), (0, pn)), constant_values=1.0)
+        out = _qmm.int4_matmul(x2p, wp, wsp, interpret=interpret,
+                               out_dtype=out_dtype)
+        return out[:m, :n].reshape(*lead, n)
     x2p, m, _ = _pad2d(x2, bm, bk)
     wp, _, _ = _pad2d(w_codes, bk, bn)
     ws = jnp.broadcast_to(jnp.asarray(w_scale, jnp.float32).reshape(1, -1), (1, n))
@@ -91,6 +119,83 @@ def int_matmul(x, w_codes, w_scale, w_spec: QuantSpec, *, interpret=None,
     out = _qmm.int_matmul(x2p, wp, wsp, q_n_w=w_spec.q_n, q_p_w=w_spec.q_p,
                           interpret=interpret, out_dtype=out_dtype)
     return out[:m, :n].reshape(*lead, n)
+
+
+# ---------------------------------------------------------------------------
+# Fused QAT matmul with custom_vjp (the training hot path)
+# ---------------------------------------------------------------------------
+
+def _qmm2d_forward(static, x2, w2, a_scale, a_offset, ws_cols):
+    q_n_a, q_p_a, q_n_w, q_p_w, interpret, out_dtype, _round_cot = static
+    m, k = x2.shape
+    n = w2.shape[1]
+    bm, bn, bk = _qmm.DEFAULT_TILES
+    x2p, _, _ = _pad2d(x2, bm, bk)
+    wp, _, _ = _pad2d(w2, bk, bn)
+    ws = jnp.reshape(ws_cols, (1, n)).astype(jnp.float32)
+    wsp = jnp.pad(ws, ((0, 0), (0, wp.shape[1] - n)), constant_values=1.0)
+    out = _qmm.quant_matmul(x2p, wp, a_scale, a_offset, wsp,
+                            q_n_a=q_n_a, q_p_a=q_p_a, q_n_w=q_n_w, q_p_w=q_p_w,
+                            interpret=interpret, out_dtype=out_dtype)
+    return out[:m, :n]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _fused_qmm2d(static, x2, w2, a_scale, a_offset, ws_cols):
+    return _qmm2d_forward(static, x2, w2, a_scale, a_offset, ws_cols)
+
+
+def _fused_qmm2d_fwd(static, x2, w2, a_scale, a_offset, ws_cols):
+    y = _qmm2d_forward(static, x2, w2, a_scale, a_offset, ws_cols)
+    return y, (x2, w2, a_scale, a_offset, ws_cols)
+
+
+def _fused_qmm2d_bwd(static, res, dy):
+    q_n_a, q_p_a, q_n_w, q_p_w, interpret, _out_dtype, round_cot = static
+    x2, w2, a_scale, a_offset, ws_cols = res
+    m, k = x2.shape
+    n = w2.shape[1]
+    bm, bn, bk = _qmm.DEFAULT_TILES
+    # dy rows pad to the same ceil(m/bm)*bm as x, cols to ceil(n/bn)*bn as w
+    dyp, _, _ = _pad2d(dy.astype(jnp.float32), bm, bn)
+    xp, _, _ = _pad2d(x2, bm, bk)
+    wp, _, _ = _pad2d(w2, bk, bn)
+    ws = jnp.reshape(ws_cols, (1, n)).astype(jnp.float32)
+    wsp = jnp.pad(ws, ((0, 0), (0, wp.shape[1] - n)), constant_values=1.0)
+    kw = dict(q_n_a=q_n_a, q_p_a=q_p_a, q_n_w=q_n_w, q_p_w=q_p_w,
+              round_cot=round_cot, interpret=interpret)
+    dx, dsa, dba = _qmm.quant_matmul_dx(dyp, xp, wp, a_scale, a_offset, wsp, **kw)
+    dw, dws = _qmm.quant_matmul_dw(dyp, xp, wp, a_scale, a_offset, wsp, **kw)
+    return (dx[:m, :k].astype(x2.dtype),
+            dw[:k, :n].astype(w2.dtype),
+            dsa.astype(jnp.result_type(a_scale)).reshape(jnp.shape(a_scale)),
+            dba.astype(jnp.result_type(a_offset)).reshape(jnp.shape(a_offset)),
+            dws[0, :n].astype(jnp.result_type(ws_cols)))
+
+
+_fused_qmm2d.defvjp(_fused_qmm2d_fwd, _fused_qmm2d_bwd)
+
+
+def fused_qat_matmul(x, w2, a_scale, a_offset, ws_cols,
+                     a_spec: QuantSpec, w_spec: QuantSpec, *,
+                     interpret=None, out_dtype=jnp.float32,
+                     cotangent_rounding: bool = True):
+    """Differentiable fused q(x) @ q(w) — forward and backward each one
+    Pallas kernel (single HBM round trip), LSQ/LSQ+ gradients for all five
+    inputs.
+
+    x: (..., K); w2: (K, N); a_scale/a_offset: 0-d (pre-grad_scale'd by the
+    caller); ws_cols: (N,) per-column scale (pre-grad_scale'd and expanded
+    from its group shape by a differentiable broadcast, so group-sum and g
+    factors ride on autodiff outside this boundary).
+    """
+    interpret = (not on_tpu()) if interpret is None else interpret
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    static = (a_spec.q_n, a_spec.q_p, w_spec.q_n, w_spec.q_p,
+              bool(interpret), out_dtype, bool(cotangent_rounding))
+    y2 = _fused_qmm2d(static, x2, w2, a_scale, a_offset, ws_cols)
+    return y2.reshape(*lead, w2.shape[-1])
 
 
 def bin_stats(w, scale, spec: QuantSpec, *, interpret=None):

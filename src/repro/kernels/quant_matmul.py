@@ -88,6 +88,206 @@ def quant_matmul(x, w, a_scale, a_offset, w_col_scale, *,
     )(x, w, a_s, a_b, w_col_scale.astype(jnp.float32))
 
 
+# ---------------------------------------------------------------------------
+# Backward kernels (LSQ/LSQ+ Eq. 6-7, masks recomputed tile-wise in VMEM)
+# ---------------------------------------------------------------------------
+#
+# The unfused composition materializes the dequantized X and W in HBM twice
+# per linear (forward + saved-for-backward). These kernels redo the cheap
+# quantize math on the tile already resident in VMEM, so the backward — like
+# the forward — makes exactly one HBM round trip per operand:
+#
+#   dX      = (dY @ Wd^T) * 1[-Q_N <= (x-b)/s <= Q_P]            (Eq. 6)
+#   d s_a   = sum dXq * (round(u) - u  inside | -Q_N / Q_P outside)   (Eq. 7)
+#   d b_a   = sum dXq * (1 - mask)                               (LSQ+ offset)
+#   dW      = (Xd^T @ dY) * 1[-Q_N <= w/s <= Q_P]
+#   d s_w   = per-column sum dWq * (round(u_w) - u_w | -Q_N | Q_P)
+#
+# Cotangents are rounded through bf16 after the f32-accumulated dot so the
+# fused path is bit-compatible with the unfused bf16 einsum's autodiff.
+
+
+def _qmm_dx_kernel(dy_ref, w_ref, ws_ref, x_ref, as_ref, ab_ref,
+                   dx_ref, dsa_ref, dba_ref, acc_ref, *,
+                   q_n_a, q_p_a, q_n_w, q_p_w, n_n, round_cot):
+    i, kk, j = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+
+    @pl.when(jnp.logical_and(i == 0, jnp.logical_and(kk == 0, j == 0)))
+    def _init_scalars():
+        dsa_ref[...] = jnp.zeros_like(dsa_ref)
+        dba_ref[...] = jnp.zeros_like(dba_ref)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    w = w_ref[...].astype(jnp.float32)
+    w_s = jnp.maximum(ws_ref[...].astype(jnp.float32), 1e-9)
+    wd = jnp.clip(jnp.round(w / w_s), -float(q_n_w), float(q_p_w)) * w_s
+    wd = wd.astype(jnp.bfloat16)
+    if round_cot:  # bf16-einsum caller: cotangent rounds like its autodiff
+        dy = dy_ref[...].astype(jnp.bfloat16)
+    else:          # f32-preferred einsum caller (lm_head): keep f32
+        dy = dy_ref[...].astype(jnp.float32)
+        wd = wd.astype(jnp.float32)
+    acc_ref[...] += jax.lax.dot_general(
+        dy, wd, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(j == n_n - 1)
+    def _done():
+        # cotangents take the primal's dtype, so the unfused einsum's dX
+        # always rounds through bf16 at the astype boundary — match it
+        dxd = acc_ref[...].astype(jnp.bfloat16).astype(jnp.float32)
+        x = x_ref[...].astype(jnp.float32)
+        a_s = jnp.maximum(as_ref[0, 0], 1e-9)
+        a_b = ab_ref[0, 0]
+        u = (x - a_b) / a_s
+        mf = jnp.logical_and(u >= -float(q_n_a),
+                             u <= float(q_p_a)).astype(jnp.float32)
+        q = jnp.clip(jnp.round(u), -float(q_n_a), float(q_p_a))
+        dx_ref[...] = (dxd * mf).astype(dx_ref.dtype)
+        dsa_ref[0, 0] += jnp.sum(dxd * (q - mf * u))
+        dba_ref[0, 0] += jnp.sum(dxd * (1.0 - mf))
+
+
+@functools.partial(jax.jit, static_argnames=("q_n_a", "q_p_a", "q_n_w", "q_p_w",
+                                             "round_cot", "tiles", "interpret"))
+def quant_matmul_dx(dy, x, w, a_scale, a_offset, w_col_scale, *,
+                    q_n_a: int, q_p_a: int, q_n_w: int, q_p_w: int,
+                    round_cot: bool = True,
+                    tiles=DEFAULT_TILES, interpret: bool = True):
+    """Backward wrt x of quant_matmul: (dX, d a_scale_raw, d a_offset_raw).
+
+    dy: (M, N); x: (M, K); w: (K, N); w_col_scale: (1, N). The scale/offset
+    cotangents are the RAW range-indicator sums — the caller applies the
+    module-wise gradient scale g (via core.quantizer.grad_scale, outside).
+    """
+    m, k = x.shape
+    _, n = w.shape
+    bm = min(tiles[0], m)
+    bn = min(tiles[1], n)
+    bk = min(tiles[2], k)
+    grid = (pl.cdiv(m, bm), pl.cdiv(k, bk), pl.cdiv(n, bn))
+    a_s = jnp.reshape(jnp.asarray(a_scale, jnp.float32), (1, 1))
+    a_b = jnp.reshape(jnp.asarray(a_offset, jnp.float32), (1, 1))
+    dx, dsa, dba = pl.pallas_call(
+        functools.partial(_qmm_dx_kernel, q_n_a=q_n_a, q_p_a=q_p_a,
+                          q_n_w=q_n_w, q_p_w=q_p_w, n_n=grid[2],
+                          round_cot=round_cot),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, kk, j: (i, j)),
+            pl.BlockSpec((bk, bn), lambda i, kk, j: (kk, j)),
+            pl.BlockSpec((1, bn), lambda i, kk, j: (0, j)),
+            pl.BlockSpec((bm, bk), lambda i, kk, j: (i, kk)),
+            pl.BlockSpec((1, 1), lambda i, kk, j: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i, kk, j: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, bk), lambda i, kk, j: (i, kk)),
+            pl.BlockSpec((1, 1), lambda i, kk, j: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i, kk, j: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, k), jnp.float32),
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((bm, bk), jnp.float32)],
+        interpret=interpret,
+    )(dy, w, w_col_scale.astype(jnp.float32), x, a_s, a_b)
+    return dx, dsa.reshape(()), dba.reshape(())
+
+
+def _qmm_dw_kernel(x_ref, dy_ref, as_ref, ab_ref, w_ref, ws_ref,
+                   dw_ref, dws_ref, acc_ref, *,
+                   q_n_a, q_p_a, q_n_w, q_p_w, n_m, round_cot):
+    kk, i = pl.program_id(1), pl.program_id(2)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...].astype(jnp.float32)
+    a_s = jnp.maximum(as_ref[0, 0], 1e-9)
+    a_b = ab_ref[0, 0]
+    xq = jnp.clip(jnp.round((x - a_b) / a_s), -float(q_n_a), float(q_p_a))
+    xd = (xq * a_s + a_b).astype(jnp.bfloat16)
+    if round_cot:
+        dy = dy_ref[...].astype(jnp.bfloat16)
+    else:
+        dy = dy_ref[...].astype(jnp.float32)
+        xd = xd.astype(jnp.float32)
+    acc_ref[...] += jax.lax.dot_general(
+        xd, dy, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(i == n_m - 1)
+    def _done():
+        dwd = acc_ref[...].astype(jnp.bfloat16).astype(jnp.float32)
+        w = w_ref[...].astype(jnp.float32)
+        w_s = jnp.maximum(ws_ref[...].astype(jnp.float32), 1e-9)
+        u = w / w_s
+        mf = jnp.logical_and(u >= -float(q_n_w),
+                             u <= float(q_p_w)).astype(jnp.float32)
+        q = jnp.clip(jnp.round(u), -float(q_n_w), float(q_p_w))
+        dw_ref[...] = (dwd * mf).astype(dw_ref.dtype)
+        part = jnp.sum(dwd * (q - mf * u), axis=0, keepdims=True)
+
+        @pl.when(kk == 0)
+        def _first():
+            dws_ref[...] = part
+
+        @pl.when(kk > 0)
+        def _rest():
+            dws_ref[...] += part
+
+
+@functools.partial(jax.jit, static_argnames=("q_n_a", "q_p_a", "q_n_w", "q_p_w",
+                                             "round_cot", "tiles", "interpret"))
+def quant_matmul_dw(dy, x, w, a_scale, a_offset, w_col_scale, *,
+                    q_n_a: int, q_p_a: int, q_n_w: int, q_p_w: int,
+                    round_cot: bool = True,
+                    tiles=DEFAULT_TILES, interpret: bool = True):
+    """Backward wrt w of quant_matmul: (dW, d w_col_scale_raw (1, N)).
+
+    Per-column scale cotangents are summed over K in-kernel; the caller
+    reduces columns into their scale groups and applies the gradient scale.
+    """
+    m, k = x.shape
+    _, n = w.shape
+    bm = min(tiles[0], m)
+    bn = min(tiles[1], n)
+    bk = min(tiles[2], k)
+    grid = (pl.cdiv(n, bn), pl.cdiv(k, bk), pl.cdiv(m, bm))
+    a_s = jnp.reshape(jnp.asarray(a_scale, jnp.float32), (1, 1))
+    a_b = jnp.reshape(jnp.asarray(a_offset, jnp.float32), (1, 1))
+    dw, dws = pl.pallas_call(
+        functools.partial(_qmm_dw_kernel, q_n_a=q_n_a, q_p_a=q_p_a,
+                          q_n_w=q_n_w, q_p_w=q_p_w, n_m=grid[2],
+                          round_cot=round_cot),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda j, kk, i: (i, kk)),
+            pl.BlockSpec((bm, bn), lambda j, kk, i: (i, j)),
+            pl.BlockSpec((1, 1), lambda j, kk, i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda j, kk, i: (0, 0)),
+            pl.BlockSpec((bk, bn), lambda j, kk, i: (kk, j)),
+            pl.BlockSpec((1, bn), lambda j, kk, i: (0, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bk, bn), lambda j, kk, i: (kk, j)),
+            pl.BlockSpec((1, bn), lambda j, kk, i: (0, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((k, n), jnp.float32),
+            jax.ShapeDtypeStruct((1, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((bk, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, dy, a_s, a_b, w, w_col_scale.astype(jnp.float32))
+    return dw, dws
+
+
 @functools.partial(jax.jit, static_argnames=("q_n_w", "q_p_w", "tiles",
                                              "interpret", "out_dtype"))
 def int_matmul(x, w_codes, w_col_scale, *, q_n_w: int, q_p_w: int,
@@ -131,3 +331,57 @@ def int_matmul(x, w_codes, w_col_scale, *, q_n_w: int, q_p_w: int,
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         interpret=interpret,
     )(x, w_codes, w_col_scale.astype(jnp.float32))
+
+
+@functools.partial(jax.jit, static_argnames=("tiles", "interpret", "out_dtype"))
+def int4_matmul(x, w_packed, w_col_scale, *, tiles=DEFAULT_TILES,
+                interpret: bool = True, out_dtype=jnp.float32):
+    """Serving matmul over NIBBLE-PACKED int4 weight codes.
+
+    w_packed: (K//2, N) int8, byte p holding code row 2p in the low nibble and
+    row 2p+1 in the high nibble (two's complement, so any bits<=4 code fits).
+    HBM reads 0.5 byte/weight — half of int_matmul, a quarter of bf16 — and
+    the unpack (shift/sign-extend/interleave) happens on the VMEM tile.
+
+    K must be even and a multiple of 2*... the ops wrapper pads to tiles.
+    """
+    m, k = x.shape
+    kp, n = w_packed.shape
+    assert k == 2 * kp, (x.shape, w_packed.shape)
+    bm = min(tiles[0], m)
+    bn = min(tiles[1], n)
+    bk = min(tiles[2], k)
+    assert bk % 2 == 0, bk
+    grid = (pl.cdiv(m, bm), pl.cdiv(n, bn), pl.cdiv(k, bk))
+
+    def kernel(x_ref, c_ref, ws_ref, o_ref, acc_ref):
+        @pl.when(pl.program_id(2) == 0)
+        def _init():
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+        b32 = c_ref[...].astype(jnp.int32)             # (bk//2, bn) bytes
+        lo = (b32 << 28) >> 28                         # sign-extended nibbles
+        hi = (b32 << 24) >> 28
+        codes = jnp.stack([lo, hi], axis=1).reshape(bk, b32.shape[1])
+        wd = (codes.astype(jnp.float32)
+              * jnp.maximum(ws_ref[...].astype(jnp.float32), 1e-9)
+              ).astype(jnp.bfloat16)
+        acc_ref[...] += jnp.dot(x_ref[...].astype(jnp.bfloat16), wd,
+                                preferred_element_type=jnp.float32)
+
+        @pl.when(pl.program_id(2) == grid[2] - 1)
+        def _done():
+            o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk // 2, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, w_packed, w_col_scale.astype(jnp.float32))

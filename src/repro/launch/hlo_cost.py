@@ -436,6 +436,37 @@ def analyze(text: str) -> dict:
     return total.as_dict()
 
 
+def entry_boundary_bytes(text: str) -> dict:
+    """HBM boundary of a compiled program: ENTRY parameters + ROOT output.
+
+    This is the traffic model for a fully-fused kernel (Pallas or XLA
+    mega-fusion): the interior lives in VMEM/registers, so HBM moves exactly
+    the inputs once and the outputs once. Comparing `analyze(...)["bytes"]`
+    of the unfused composition against the fused program's boundary
+    quantifies the fusion win hardware-independently (the interpret-mode
+    interior on CPU is deliberately ignored).
+    """
+    comps, _symtabs, entry = split_computations(text)
+    if entry is None:
+        raise ValueError("no ENTRY computation found in HLO text")
+    param_bytes = 0
+    out_bytes = 0
+    for line in comps.get(entry, []):
+        body = line.split(" = ", 1)
+        if len(body) != 2:
+            continue
+        type_str, rest = _split_type(body[1])
+        m = re.match(r"([\w\-]+)", rest)
+        if not m:
+            continue
+        if m.group(1) == "parameter":
+            param_bytes += _shapes_bytes(type_str)
+        if line.startswith("ROOT"):
+            out_bytes = _shapes_bytes(type_str)
+    return {"param_bytes": param_bytes, "output_bytes": out_bytes,
+            "bytes": param_bytes + out_bytes}
+
+
 def analyze_by_opcode(text: str, top_lines: int = 12) -> dict:
     """Attribution variant: bytes per opcode + the heaviest individual op
     lines (bytes x trip multiplier). Used by the perf-iteration loop to

@@ -14,7 +14,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.policy import QuantConfig, act_spec, weight_spec
-from repro.core.quantizer import fake_quant, init_offset, init_scale
+from repro.core.quantizer import (QuantSpec, fake_quant, grad_scale,
+                                  init_offset, init_scale, pack_int4,
+                                  scale_grad_factor, unpack_int4)
+from repro.kernels import ops
+
+_SPEC8 = QuantSpec(bits=8)  # spec placeholder for serving int matmuls
 
 # Param-name -> policy kind. Names are unique per kind across all block types.
 NAME2KIND = {
@@ -43,6 +48,156 @@ NAME2KIND = {
 
 def kind_of(name: str) -> str:
     return NAME2KIND[name]
+
+
+# ---------------------------------------------------------------------------
+# Fused-matmul dispatch (kernels/quant_matmul via kernels/ops)
+# ---------------------------------------------------------------------------
+
+# Einsums the fused kernel covers: every 2D contraction in the network,
+# including the reshaped-head qkv/o forms. Value = number of LEADING w axes
+# that are contracted (the 2D reshape's K side).
+FUSED_EQS = {
+    "bsd,df->bsf": 1,   # ffn in/gate
+    "bsf,fd->bsd": 1,   # ffn out
+    "bsd,dhk->bshk": 1,  # attention q/k/v (heads on the N side)
+    "bshk,hkd->bsd": 2,  # attention o (heads on the K side)
+    "bsd,dv->bsv": 1,   # lm head
+    # xlstm / rglru projections (same 2D-contraction family)
+    "bsd,du->bsu": 1, "bsu,ud->bsd": 1, "bsu,uh->bsh": 1,
+    "bsu,uhd->bshd": 1,
+    "bsd,dw->bsw": 1, "bsw,wv->bsv": 1, "bsw,wd->bsd": 1,
+    # NOT "td,de->te": the MoE router is tiny and feeds top-k decisions;
+    # keeping it on the f32 einsum preserves routing determinism.
+    # NOT "gecd,edf->gecf"/"gecf,efd->gecd": batched per-expert matmuls
+    # (ROADMAP open item).
+}
+
+# Int4 serving codes are nibble-packed along the matmul contraction axis,
+# counted from the END so the rule survives vmap-stacking (scan over layers).
+_PACK_AXIS = dict.fromkeys(
+    ("wq", "wk", "wv", "xq", "xk", "xv", "mq", "mk", "mv"), -3)
+
+
+def pack_axis_of(name: str) -> int:
+    return _PACK_AXIS.get(name, -2)
+
+
+def _use_fused(qcfg: QuantConfig) -> bool:
+    if qcfg.fused_matmul == "on":
+        return True
+    if qcfg.fused_matmul == "off":
+        return False
+    return ops.on_tpu()
+
+
+def _cols_shape_ok(scale_shape, w_shape, n_k: int) -> bool:
+    """True when the scale's groups lie on the N side of the 2D reshape
+    (per-tensor, or broadcastable with 1s on all contracted axes)."""
+    if len(scale_shape) == 0:
+        return True
+    if len(scale_shape) != len(w_shape):
+        return False
+    if any(s != 1 for s in scale_shape[:n_k]):
+        return False  # K-side groups (e.g. per-head wo): kernel can't yet
+    return all(s in (1, t) for s, t in zip(scale_shape[n_k:], w_shape[n_k:]))
+
+
+def _scale_cols(scale, w_shape, n_k: int):
+    """Differentiable (N,) per-column expansion of a broadcastable scale.
+
+    The broadcast is plain jnp, so the scale cotangent group-sums back to the
+    stored shape through autodiff — the custom_vjp below the boundary only
+    ever sees per-column scales.
+    """
+    tgt = (1,) * n_k + tuple(w_shape[n_k:])
+    if jnp.ndim(scale) == 0:
+        scale = jnp.reshape(scale, (1,) * len(w_shape))
+    return jnp.broadcast_to(scale, tgt).reshape(-1)
+
+
+def _fused_eligible(qcfg, aspec, wspec, eq: str, p: dict, w) -> bool:
+    if eq not in FUSED_EQS or not _use_fused(qcfg):
+        return False
+    if aspec is None or wspec is None or "a_scale" not in p:
+        return False
+    if aspec.bits == 1 or wspec.bits == 1:
+        return False  # binary sign_ste semantics differ from round/clip
+    return _cols_shape_ok(jnp.shape(p["w_scale"]), w.shape, FUSED_EQS[eq])
+
+
+def _fused_qat_linear(p: dict, x, aspec, wspec, n_k: int, *, out_dtype,
+                      cotangent_rounding: bool = True):
+    """Route one QAT linear through the fused custom_vjp Pallas path.
+
+    grad_scale (the module-wise g factor, Sec. 4.4.1) is applied here —
+    outside the custom_vjp — exactly as core.quantizer.fake_quant does, so
+    the five gradients match the unfused composition's autodiff.
+    """
+    w = p["w"]
+    k = 1
+    for d in w.shape[:n_k]:
+        k *= d
+    n = w.size // k
+    ref = jax.lax.stop_gradient(w)
+    g_w = scale_grad_factor(wspec, ref, jnp.shape(p["w_scale"]))
+    s_w = grad_scale(p["w_scale"], g_w)
+    cols = _scale_cols(s_w, w.shape, n_k)
+    g_a = scale_grad_factor(aspec, ref, ())
+    s_a = grad_scale(p["a_scale"], g_a)
+    if "a_offset" in p:
+        b_a = grad_scale(p["a_offset"], g_a)
+    else:
+        b_a = jnp.zeros((), jnp.float32)
+    lead = x.shape[:x.ndim - n_k]
+    x2 = x.reshape(lead + (k,))
+    y = ops.fused_qat_matmul(x2, w.reshape(k, n), s_a, b_a, cols,
+                             aspec, wspec, out_dtype=out_dtype,
+                             cotangent_rounding=cotangent_rounding)
+    return y.reshape(lead + tuple(w.shape[n_k:]))
+
+
+def _serving_linear(p: dict, x, name: str, qcfg: QuantConfig, eq: str,
+                    cdtype, out_dtype=None):
+    """Serving linear over int codes: fused Pallas int(4)_matmul when the
+    shape is covered, dequantize+einsum fallback otherwise."""
+    kind = kind_of(name)
+    wspec = weight_spec(qcfg, kind) or _SPEC8
+    packed = "codes4" in p
+    codes = p["codes4"] if packed else p["codes"]
+    n_k = FUSED_EQS.get(eq)
+    orig_shape = list(codes.shape)
+    ax = pack_axis_of(name) % len(orig_shape)
+    if packed:
+        orig_shape[ax] *= 2
+    orig_shape = tuple(orig_shape)
+    fused = (n_k is not None and _use_fused(qcfg)
+             and (not packed or ax < n_k)
+             and _cols_shape_ok(jnp.shape(p["w_scale"]), orig_shape, n_k))
+    if fused:
+        k = 1
+        for d in orig_shape[:n_k]:
+            k *= d
+        n = codes.size // (k // 2 if packed else k)
+        cols = _scale_cols(p["w_scale"], orig_shape, n_k)
+        lead = x.shape[:x.ndim - n_k]
+        x2 = x.reshape(lead + (k,)).astype(cdtype)
+        codes2 = codes.reshape((k // 2 if packed else k, n))
+        y = ops.int_matmul(x2, codes2, cols, wspec, packed=packed,
+                           out_dtype=jnp.float32)
+        y = y.reshape(lead + tuple(orig_shape[n_k:]))
+        y = y.astype(out_dtype or cdtype)
+    else:
+        full = unpack_int4(codes, ax) if packed else codes
+        w = full.astype(cdtype) * p["w_scale"].astype(cdtype)
+        if out_dtype is not None:
+            y = jnp.einsum(eq, x.astype(cdtype), w,
+                           preferred_element_type=out_dtype)
+        else:
+            y = jnp.einsum(eq, x.astype(cdtype), w)
+    if "b" in p:
+        y = y + p["b"].astype(y.dtype)
+    return y
 
 
 # ---------------------------------------------------------------------------
@@ -75,31 +230,41 @@ def qlinear(p: dict, x: jax.Array, name: str, qcfg: QuantConfig, eq: str,
             cdtype=jnp.bfloat16) -> jax.Array:
     """Apply a quantized einsum-linear: fake-quant acts & weights, contract.
 
+    Dispatch: every 2D-contraction einsum (FUSED_EQS — ffn, reshaped-head
+    qkv/o, lm head, recurrent projections) routes through the fused Pallas
+    quant-matmul
+    (kernels/quant_matmul, custom_vjp for QAT; int(4)_matmul for serving)
+    when `qcfg.fused_matmul` resolves on ("auto" = real TPU; "on" forces the
+    interpret-mode kernel so CPU tests exercise it). Shapes the kernel does
+    not cover yet — K-side per-head scales (wo/xo under MDQ), MoE's batched
+    expert einsum, binary (1-bit) quantizers — fall back to the pure-jnp
+    composition below.
+
     Quantization math runs in f32 (bf16 was measured to give NO memory-term
     reduction — XLA fuses the upcast chain — while adding rounding noise;
     EXPERIMENTS.md Perf-3, refuted). The contraction runs in the compute
-    dtype. On TPU the fused Pallas path (kernels/quant_matmul) replaces the
-    2D-matmul case.
+    dtype with f32 accumulation.
     """
     kind = kind_of(name)
-    if "codes" in p:
-        # Serving path: weights stored as int codes + scale (HBM = 1 byte/el;
-        # dequantized tile-wise into the matmul — the Pallas quant_matmul
-        # kernel fuses this on TPU).
-        w = p["codes"].astype(cdtype) * p["w_scale"].astype(cdtype)
-        y = jnp.einsum(eq, x.astype(cdtype), w)
+    if "codes" in p or "codes4" in p:
+        # Serving path: weights stored as int codes + scale (1 byte/element
+        # in HBM, 0.5 when nibble-packed at <=4 bits).
+        return _serving_linear(p, x, name, qcfg, eq, cdtype)
+    w = p["w"]
+    aspec = act_spec(qcfg, kind)
+    wspec = weight_spec(qcfg, kind)
+    if _fused_eligible(qcfg, aspec, wspec, eq, p, w):
+        y = _fused_qat_linear(p, x, aspec, wspec, FUSED_EQS[eq],
+                              out_dtype=jnp.float32).astype(cdtype)
         if "b" in p:
             y = y + p["b"].astype(cdtype)
         return y
-    w = p["w"]
-    aspec = act_spec(qcfg, kind)
     if aspec is not None:
         xq = fake_quant(x.astype(jnp.float32), p["a_scale"], aspec,
                         offset=p.get("a_offset"), grad_scale_ref=w)
         x = xq.astype(cdtype)
     else:
         x = x.astype(cdtype)
-    wspec = weight_spec(qcfg, kind)
     if wspec is not None:
         w = fake_quant(w, p["w_scale"], wspec)
     y = jnp.einsum(eq, x, w.astype(cdtype))
@@ -110,6 +275,9 @@ def qlinear(p: dict, x: jax.Array, name: str, qcfg: QuantConfig, eq: str,
 
 def quantized_weight(p: dict, name: str, qcfg: QuantConfig) -> jax.Array:
     """The fake-quantized weight (f32) of a linear sub-dict."""
+    if "codes4" in p:
+        codes = unpack_int4(p["codes4"], pack_axis_of(name))
+        return codes.astype(jnp.float32) * p["w_scale"].astype(jnp.float32)
     if "codes" in p:
         return p["codes"].astype(jnp.float32) * p["w_scale"].astype(jnp.float32)
     kind = kind_of(name)
@@ -120,13 +288,14 @@ def quantized_weight(p: dict, name: str, qcfg: QuantConfig) -> jax.Array:
 
 
 def convert_to_serving(params, qcfg: QuantConfig):
-    """Freeze QAT weights into int8 code + scale storage for serving.
+    """Freeze QAT weights into int code + scale storage for serving.
 
-    Every quantized linear's latent f32 "w" is replaced by its int codes
-    (1 byte/element in HBM; int4 values occupy int8 storage — sub-byte
-    packing is a documented TODO halving this again). Activation quantizer
-    params are dropped (no STE at inference). Non-quantized weights are cast
-    to bf16.
+    Every quantized linear's latent f32 "w" is replaced by its int codes:
+    1 byte/element in HBM at 5-8 bits ("codes"), and at <=4 bits two codes
+    nibble-packed per byte along the matmul contraction axis ("codes4",
+    0.5 byte/element — kernels/quant_matmul.int4_matmul unpacks tile-wise in
+    VMEM). Activation quantizer params are dropped (no STE at inference).
+    Non-quantized weights are cast to bf16.
     """
     from repro.core.quantizer import quantize_int
 
@@ -141,7 +310,14 @@ def convert_to_serving(params, qcfg: QuantConfig):
                     w, sc = child["w"], child["w_scale"]
                     if sc.ndim not in (0, w.ndim):  # stacked per-tensor scale
                         sc = sc.reshape(sc.shape + (1,) * (w.ndim - sc.ndim))
-                    new = {"codes": quantize_int(w, sc, spec), "w_scale": sc}
+                    codes = quantize_int(w, sc, spec)
+                    ax = pack_axis_of(name)
+                    if (spec.bits <= 4 and name != "embed"
+                            and w.shape[ax] % 2 == 0):
+                        new = {"codes4": pack_int4(codes, ax % w.ndim),
+                               "w_scale": sc}
+                    else:
+                        new = {"codes": codes, "w_scale": sc}
                     if "b" in child:
                         new["b"] = child["b"].astype(jnp.bfloat16)
                     out[name] = new
@@ -187,7 +363,13 @@ def lm_head_init(key, qcfg: QuantConfig, d_model: int, vocab_padded: int) -> dic
 def lm_head_apply(p: dict, x: jax.Array, qcfg: QuantConfig, vocab_size: int,
                   vocab_padded: int, final_softcap: float = 0.0,
                   tied_embed: Optional[dict] = None) -> jax.Array:
-    """Project to (padded) vocab logits in f32; mask padding columns."""
+    """Project to (padded) vocab logits in f32; mask padding columns.
+
+    The untied QAT and serving projections dispatch to the fused Pallas path
+    like qlinear (eq "bsd,dv->bsv"); the tied-embedding variant stays on the
+    unfused composition (its weight is the transposed embedding — fusing it
+    is a ROADMAP open item).
+    """
     if tied_embed is not None:
         w = quantized_weight(tied_embed, "embed", qcfg).T  # (d, V)
         w = w.astype(jnp.bfloat16)
@@ -198,23 +380,29 @@ def lm_head_apply(p: dict, x: jax.Array, qcfg: QuantConfig, vocab_size: int,
         logits = jnp.einsum("bsd,dv->bsv", x.astype(jnp.bfloat16),
                             w.astype(jnp.bfloat16),
                             preferred_element_type=jnp.float32)
-    elif "codes" in p:
-        w = p["codes"].astype(jnp.bfloat16) * p["w_scale"].astype(jnp.bfloat16)
-        logits = jnp.einsum("bsd,dv->bsv", x.astype(jnp.bfloat16), w,
-                            preferred_element_type=jnp.float32)
+    elif "codes" in p or "codes4" in p:
+        logits = _serving_linear(p, x, "lm_head", qcfg, "bsd,dv->bsv",
+                                 jnp.bfloat16, out_dtype=jnp.float32)
     else:
         kind = "lm_head"
         w = p["w"]
         aspec = act_spec(qcfg, kind)
-        if aspec is not None:
-            x = fake_quant(x.astype(jnp.float32), p["a_scale"], aspec,
-                           offset=p.get("a_offset"), grad_scale_ref=w)
         wspec = weight_spec(qcfg, kind)
-        if wspec is not None:
-            w = fake_quant(w, p["w_scale"], wspec)
-        logits = jnp.einsum("bsd,dv->bsv", x.astype(jnp.bfloat16),
-                            w.astype(jnp.bfloat16),
-                            preferred_element_type=jnp.float32)
+        if _fused_eligible(qcfg, aspec, wspec, "bsd,dv->bsv", p, w):
+            # the unfused head einsum is preferred_element_type=f32, so its
+            # autodiff never rounds the cotangent to bf16 — match it
+            logits = _fused_qat_linear(p, x, aspec, wspec, 1,
+                                       out_dtype=jnp.float32,
+                                       cotangent_rounding=False)
+        else:
+            if aspec is not None:
+                x = fake_quant(x.astype(jnp.float32), p["a_scale"], aspec,
+                               offset=p.get("a_offset"), grad_scale_ref=w)
+            if wspec is not None:
+                w = fake_quant(w, p["w_scale"], wspec)
+            logits = jnp.einsum("bsd,dv->bsv", x.astype(jnp.bfloat16),
+                                w.astype(jnp.bfloat16),
+                                preferred_element_type=jnp.float32)
     if final_softcap > 0.0:
         logits = final_softcap * jnp.tanh(logits / final_softcap)
     if vocab_padded != vocab_size:

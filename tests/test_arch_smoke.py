@@ -16,6 +16,9 @@ from repro.models import model as M
 from repro.train.state import TrainConfig, init_state
 from repro.train.train_step import make_train_step
 
+pytestmark = pytest.mark.slow  # excluded from tier-1 (see pytest.ini)
+
+
 QCFG = QuantConfig(w_bits=4, a_bits=4, mode="mdq")
 
 

@@ -2,8 +2,13 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
-from numpy.testing import assert_allclose
+import pytest
+
+# hypothesis is a dev-only extra (requirements-dev.txt); degrade to skip
+# rather than a collection error when it isn't installed.
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+from numpy.testing import assert_allclose  # noqa: E402
 
 from repro.core.quantizer import QuantSpec, fake_quant, init_scale, quantize_int
 

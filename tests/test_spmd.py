@@ -11,6 +11,9 @@ import sys
 
 import pytest
 
+pytestmark = pytest.mark.slow  # excluded from tier-1 (see pytest.ini)
+
+
 HARNESS = os.path.join(os.path.dirname(__file__), "_spmd_harness.py")
 
 

@@ -20,6 +20,9 @@ from repro.optim.adamw import AdamWConfig
 from repro.train.state import TrainConfig, init_state
 from repro.train.train_step import make_eval_step, make_train_step
 
+pytestmark = pytest.mark.slow  # excluded from tier-1 (see pytest.ini)
+
+
 CFG = reduced_config(get_config("granite-8b")).replace(n_layers=2)
 DCFG = DataConfig(p_noise=0.05)
 
