@@ -158,6 +158,9 @@ def state_pspecs(state: dict, mesh, qcfg, no_tp: bool = False) -> dict:
         specs["err"] = ()
     else:
         specs["err"] = param_pspecs(err, mesh, no_tp)
+    sent = state.get("sent", ())
+    # SentinelState is five scalars — always replicated.
+    specs["sent"] = jax.tree.map(lambda _: P(), sent)
     return specs
 
 

@@ -6,9 +6,17 @@
 Builds a mesh over the available devices (data x model), shards the train
 state with the production rules (FSDP + TP + per-head scale sharding), and
 runs the QAT loop with MCKD labels, async checkpointing, preemption
-handling, and straggler telemetry. On a real TPU slice the same entrypoint
-runs unmodified (jax.distributed.initialize is attempted when the
-JAX_COORDINATOR_ADDRESS env var is present); on this CPU container use
+handling, straggler telemetry, and the run sentinel (train/sentinel.py):
+in-step health checks skip poisoned updates, and after `k_consecutive`
+fatal steps the loop rolls back to the newest CRC-verified checkpoint with
+an LR backoff (bounded retries, then SentinelAbort). `--no-sentinel`
+disables all of it so benchmarks can measure the sentinel's overhead.
+
+The loop itself lives in `run_training()` so the fault-injection suite
+(tests/test_sentinel_faults.py) can drive it in-process with deterministic
+injectors (repro/testing/faultinject.py). On a real TPU slice the same
+entrypoint runs unmodified (jax.distributed.initialize is attempted when
+the JAX_COORDINATOR_ADDRESS env var is present); on this CPU container use
 --smoke for reduced configs.
 
 XLA flags for real runs (latency-hiding collective overlap) are appended via
@@ -17,8 +25,10 @@ LIBTPU_INIT_ARGS / XLA_FLAGS when --tpu-flags is passed.
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import os
 import time
+from typing import Callable, Optional
 
 import jax
 
@@ -29,13 +39,135 @@ from repro.data.synthetic import DataConfig, sample_batch
 from repro.dist import sharding as shard
 from repro.launch.mesh import make_host_mesh
 from repro.optim.adamw import AdamWConfig
+from repro.train import checkpoint as ckpt
 from repro.train.fault_tolerance import CheckpointManager
+from repro.train.sentinel import SentinelConfig, SentinelRunner, describe
 from repro.train.state import TrainConfig, init_state
 from repro.train.train_step import make_train_step
 
 TPU_PERF_FLAGS = ("--xla_enable_async_all_gather=true "
                   "--xla_enable_async_collective_permute=true "
                   "--xla_tpu_enable_async_collective_fusion=true")
+
+
+@dataclasses.dataclass
+class RunReport:
+    """What happened during a `run_training` invocation (tests assert on
+    this; the CLI prints it)."""
+
+    final_step: int           # last loop index that completed
+    final_loss: float
+    steps_run: int            # step_fn invocations (includes replayed steps)
+    rollbacks: int            # sentinel rollback-recoveries performed
+    skipped: int              # updates skipped as fatal (sentinel counter)
+    lr_scale: float           # final sentinel LR backoff multiplier
+    preempted: bool           # SIGTERM/SIGINT clean exit taken
+    straggler_flags: int
+
+
+def run_training(cfg, qcfg, tcfg: TrainConfig, dcfg: DataConfig, *,
+                 steps: int, batch_size: int = 16, seq_len: int = 64,
+                 ckpt_dir: str, save_every: int = 100, model_parallel: int = 1,
+                 log_every: int = 10,
+                 extra_loss: Optional[Callable] = None,
+                 on_step: Optional[Callable] = None,
+                 mgr: Optional[CheckpointManager] = None,
+                 seed: int = 0) -> RunReport:
+    """The QAT training loop: restore -> step -> health -> save, with
+    sentinel rollback recovery. `tcfg.sentinel` (SentinelConfig | None)
+    controls the health checks; None runs the bare loop.
+
+    extra_loss(params, step): jit-side extra loss term (fault injection /
+        regularizers), forwarded to `make_train_step`.
+    on_step(i, state) -> state | None: host-side hook before each step
+        (fault injectors poison state here; None keeps the state).
+    mgr: pass a preconfigured CheckpointManager (tests use async_io=False
+        for determinism); by default one is built over `ckpt_dir` with a
+        (arch, quant) config fingerprint stamped into every manifest.
+    """
+    mesh = make_host_mesh(model=model_parallel)
+    key = jax.random.PRNGKey(seed)
+    constrain, logits_constrain = shard.make_constrains(mesh)
+    like = jax.eval_shape(lambda k: init_state(k, cfg, qcfg, tcfg), key)
+    state_sh = shard.named_tree(shard.state_pspecs(like, mesh, qcfg), mesh)
+
+    if mgr is None:
+        mgr = CheckpointManager(ckpt_dir, save_every=save_every,
+                                expect_fingerprint=ckpt.fingerprint(cfg, qcfg))
+    state, start = mgr.restore_or_init(
+        lambda: jax.jit(lambda k: init_state(k, cfg, qcfg, tcfg),
+                        out_shardings=state_sh)(key),
+        like, shardings=state_sh)
+    if start:
+        print(f"restored from step {start} (elastic reshard onto "
+              f"{len(jax.devices())} devices)")
+
+    step_fn = jax.jit(make_train_step(cfg, qcfg, tcfg, constrain=constrain,
+                                      logits_constrain=logits_constrain,
+                                      extra_loss=extra_loss),
+                      in_shardings=(state_sh, None),
+                      out_shardings=(state_sh, None), donate_argnums=0)
+    runner = (SentinelRunner(tcfg.sentinel, mgr, like, state_sh)
+              if tcfg.sentinel is not None else None)
+
+    host = jax.process_index()
+    t0 = time.monotonic()
+    m: dict = {}
+    steps_run = 0
+    preempted = False
+    # A checkpoint labelled s is taken AFTER loop index s completed, so a
+    # restore/rollback at label s resumes at s + 1 (the data stream is
+    # (step, host)-keyed, so the replay is identical).
+    i = start if start == 0 else start + 1
+    while i < steps:
+        if on_step is not None:
+            injected = on_step(i, state)
+            if injected is not None:
+                state = injected
+        batch = sample_batch(cfg, dcfg, i, batch_size, seq_len, host_index=host)
+        if tcfg.kd == "mckd":
+            idx, p = synthetic_kd_labels(batch["labels"], cfg.vocab_size,
+                                         tcfg.kd_topk, seed=i)
+            batch.update(kd_idx=idx, kd_p=p)
+        state, m = step_fn(state, batch)
+        steps_run += 1
+        slow = mgr.straggler.tick()
+        if runner is not None:
+            health = int(m["health"])
+            if health:
+                print(f"step {i:5d} health={describe(health)} "
+                      f"(skipped={int(m['sentinel_skipped'])})", flush=True)
+            if runner.observe(health):
+                state, i = runner.rollback(state)
+                print(f"sentinel: {runner.scfg.k_consecutive} consecutive "
+                      f"fatal steps -> rolled back to step {i - 1}, "
+                      f"lr_scale={float(state['sent'].lr_scale):.3g} "
+                      f"(retry {runner.retries}/{runner.scfg.max_retries})",
+                      flush=True)
+                continue
+        if log_every and i % log_every == 0:
+            dt = (time.monotonic() - t0) / max(steps_run, 1)
+            print(f"step {i:5d} loss={float(m['loss']):.4f} "
+                  f"lr={float(m['lr']):.2e} {dt:.2f}s/step"
+                  f"{' STRAGGLER' if slow else ''}", flush=True)
+        mgr.maybe_save(state, i)
+        if mgr.should_stop():
+            print("preemption: final forced checkpoint + clean exit")
+            mgr.maybe_save(state, i, force=True)
+            preempted = True
+            break
+        i += 1
+    mgr.finalize()
+    mgr.guard.restore_handlers()
+    return RunReport(
+        final_step=i if preempted else i - 1,
+        final_loss=float(m["loss"]) if m else float("nan"),
+        steps_run=steps_run,
+        rollbacks=runner.rollbacks if runner is not None else 0,
+        skipped=int(m.get("sentinel_skipped", 0)) if m else 0,
+        lr_scale=float(m.get("lr_scale", 1.0)) if m else 1.0,
+        preempted=preempted,
+        straggler_flags=mgr.straggler.flags)
 
 
 def main():
@@ -56,6 +188,9 @@ def main():
     ap.add_argument("--save-every", type=int, default=100, dest="save_every")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--tpu-flags", action="store_true", dest="tpu_flags")
+    ap.add_argument("--no-sentinel", action="store_true", dest="no_sentinel",
+                    help="disable in-step health checks + rollback recovery "
+                         "(overhead benchmarking escape hatch)")
     args = ap.parse_args()
 
     if args.tpu_flags:
@@ -72,53 +207,20 @@ def main():
                        warmup_steps=max(args.steps // 20, 2),
                        grad_accum=args.grad_accum, kd=args.kd, kd_topk=16,
                        compress_grads=args.compress,
-                       adamw=AdamWConfig(lr_peak=args.lr))
+                       adamw=AdamWConfig(lr_peak=args.lr),
+                       sentinel=None if args.no_sentinel else SentinelConfig())
     dcfg = DataConfig(seed=args.seed)
-    mesh = make_host_mesh(model=args.mp)
-    print(f"mesh={dict(mesh.shape)} arch={cfg.name} quant={args.quant} "
-          f"kd={args.kd} accum={args.grad_accum}")
+    print(f"arch={cfg.name} quant={args.quant} kd={args.kd} "
+          f"accum={args.grad_accum} "
+          f"sentinel={'off' if args.no_sentinel else 'on'}")
 
-    key = jax.random.PRNGKey(args.seed)
-    constrain, logits_constrain = shard.make_constrains(mesh)
-    like = jax.eval_shape(lambda k: init_state(k, cfg, qcfg, tcfg), key)
-    state_sh = shard.named_tree(shard.state_pspecs(like, mesh, qcfg), mesh)
-
-    mgr = CheckpointManager(args.ckpt or f"/tmp/ckpt-{cfg.name}",
-                            save_every=args.save_every)
-    state, start = mgr.restore_or_init(
-        lambda: jax.jit(lambda k: init_state(k, cfg, qcfg, tcfg),
-                        out_shardings=state_sh)(key),
-        like, shardings=state_sh)
-    if start:
-        print(f"restored from step {start} (elastic reshard onto "
-              f"{len(jax.devices())} devices)")
-
-    step = jax.jit(make_train_step(cfg, qcfg, tcfg, constrain=constrain,
-                                   logits_constrain=logits_constrain),
-                   in_shardings=(state_sh, None), out_shardings=(state_sh, None),
-                   donate_argnums=0)
-    host = jax.process_index()
-    t0 = time.monotonic()
-    for i in range(start, args.steps):
-        batch = sample_batch(cfg, dcfg, i, args.batch, args.seq, host_index=host)
-        if args.kd == "mckd":
-            idx, p = synthetic_kd_labels(batch["labels"], cfg.vocab_size, 16,
-                                         seed=i)
-            batch.update(kd_idx=idx, kd_p=p)
-        state, m = step(state, batch)
-        slow = mgr.straggler.tick()
-        if i % 10 == 0:
-            dt = (time.monotonic() - t0) / max(i - start + 1, 1)
-            print(f"step {i:5d} loss={float(m['loss']):.4f} "
-                  f"lr={float(m['lr']):.2e} {dt:.2f}s/step"
-                  f"{' STRAGGLER' if slow else ''}", flush=True)
-        mgr.maybe_save(state, i)
-        if mgr.should_stop():
-            print("preemption: final checkpoint + clean exit")
-            mgr.maybe_save(state, i, force=True)
-            break
-    mgr.finalize()
-    print("done.")
+    report = run_training(
+        cfg, qcfg, tcfg, dcfg, steps=args.steps, batch_size=args.batch,
+        seq_len=args.seq, ckpt_dir=args.ckpt or f"/tmp/ckpt-{cfg.name}",
+        save_every=args.save_every, model_parallel=args.mp, seed=args.seed)
+    print(f"done. final_step={report.final_step} "
+          f"loss={report.final_loss:.4f} rollbacks={report.rollbacks} "
+          f"skipped={report.skipped} preempted={report.preempted}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,2 @@
+"""Deterministic fault-injection harness for the run sentinel
+(tests/test_sentinel_faults.py); see faultinject.py."""

@@ -1,0 +1,229 @@
+"""Deterministic fault injectors for the run sentinel.
+
+Every injector is reproducible (seeded byte corruption, fixed step
+triggers, one-shot host hooks) so the detect -> skip -> rollback -> resume
+loop in launch/train.run_training can be exercised end to end from tests
+(tests/test_sentinel_faults.py) and from a CLI soak run.
+
+Two injection planes:
+
+* **jit-side** (`nan_loss_at`, `nan_grads_at`): extra_loss terms compiled
+  into the train step — they fire on a step-index predicate, inside jit,
+  which is exactly where a real overflow would appear.
+* **host-side** (`OneShot` + poisoners, checkpoint corrupters, SIGTERM):
+  mutate the state pytree or the checkpoint directory between steps. A
+  host-side poison PERSISTS until rollback restores a clean state — the
+  sentinel skips every poisoned update, so only recovery (not luck) can
+  bring the run back; this is the property the e2e tests assert.
+"""
+from __future__ import annotations
+
+import os
+import signal
+from typing import Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.train import checkpoint as ckpt
+
+# --------------------------------------------------------------- jit-side
+
+
+def nan_loss_at(steps: Sequence[int]) -> Callable:
+    """extra_loss(params, step): NaN LOSS at the given steps; the injected
+    term is params-independent, so gradients stay finite (isolates the
+    NONFINITE_LOSS detector from NONFINITE_GRAD)."""
+    trigger = tuple(int(s) for s in steps)
+
+    def extra(params, step):
+        hit = jnp.isin(step, jnp.asarray(trigger, jnp.int32))
+        return jnp.where(hit, jnp.float32(jnp.nan), jnp.float32(0.0))
+
+    return extra
+
+
+def nan_grads_at(steps: Sequence[int]) -> Callable:
+    """extra_loss(params, step): NaN loss AND NaN gradients on every leaf at
+    the given steps (the term touches every parameter, so d(nan*x)/dx = nan
+    everywhere — the shape of a genuine fp overflow in the backward)."""
+    trigger = tuple(int(s) for s in steps)
+
+    def extra(params, step):
+        hit = jnp.isin(step, jnp.asarray(trigger, jnp.int32))
+        touch = jax.tree_util.tree_reduce(
+            lambda a, b: a + b,
+            jax.tree.map(lambda p: jnp.sum(p).astype(jnp.float32), params))
+        return jnp.where(hit, jnp.float32(jnp.nan), jnp.float32(0.0)) * touch
+
+    return extra
+
+
+# -------------------------------------------------------------- host-side
+
+
+class OneShot:
+    """on_step hook firing `times` times at loop index `at_step`, then never
+    again — so a rollback's deterministic replay of the same step passes
+    clean and the run can actually recover."""
+
+    def __init__(self, at_step: int, fn: Callable, times: int = 1):
+        self.at_step = at_step
+        self.fn = fn
+        self.times = times
+        self.fired = 0
+
+    def __call__(self, i: int, state):
+        if i == self.at_step and self.fired < self.times:
+            self.fired += 1
+            return self.fn(state)
+        return None
+
+
+def chain(*hooks: Callable) -> Callable:
+    """Compose on_step hooks (later hooks see earlier hooks' state)."""
+
+    def run(i, state):
+        for h in hooks:
+            out = h(i, state)
+            if out is not None:
+                state = out
+        return state
+
+    return run
+
+
+def _first_scale_path(params: dict, prefix=()):
+    """Depth-first (sorted) path to the first quantizer `w_scale` leaf."""
+    if isinstance(params, dict):
+        for k in sorted(params.keys()):
+            if k == "w_scale":
+                return prefix + (k,)
+            found = _first_scale_path(params[k], prefix + (k,))
+            if found is not None:
+                return found
+    elif isinstance(params, (tuple, list)):
+        for idx, child in enumerate(params):
+            found = _first_scale_path(child, prefix + (idx,))
+            if found is not None:
+                return found
+    return None
+
+
+def _set_path(tree, path, fn):
+    if not path:
+        return fn(tree)
+    head, rest = path[0], path[1:]
+    if isinstance(tree, dict):
+        out = dict(tree)
+        out[head] = _set_path(tree[head], rest, fn)
+        return out
+    seq = list(tree)
+    seq[head] = _set_path(seq[head], rest, fn)
+    return type(tree)(seq) if isinstance(tree, tuple) else seq
+
+
+def collapse_scale(state: dict, value: float = 0.0) -> dict:
+    """Zero (or set) the first quantizer weight scale — the LSQ collapse
+    pathology: the quantizer output and its STE gradient both die."""
+    path = _first_scale_path(state["params"])
+    if path is None:
+        raise ValueError("no w_scale leaf found (fp config?)")
+    out = dict(state)
+    out["params"] = _set_path(state["params"], path,
+                              lambda s: jnp.full_like(s, value))
+    return out
+
+
+def poison_params_nan(state: dict) -> dict:
+    """NaN an entire weight tensor: the forward, the loss, and every
+    gradient go non-finite on the NEXT step and STAY that way until a
+    rollback restores clean params (a skipped update preserves the poison
+    — recovery, not luck, ends the outage)."""
+    path = _first_scale_path(state["params"])
+    if path is None:
+        raise ValueError("no w_scale leaf found (fp config?)")
+    w_path = path[:-1] + ("w",)
+    out = dict(state)
+    out["params"] = _set_path(state["params"], w_path,
+                              lambda w: jnp.full_like(w, jnp.nan))
+    return out
+
+
+def sigterm_at(at_step: int) -> OneShot:
+    """Deliver SIGTERM to this process at the given step (preemption path:
+    PreemptionGuard flips its flag; the loop force-checkpoints + exits)."""
+
+    def fire(state):
+        os.kill(os.getpid(), signal.SIGTERM)
+        return None
+
+    return OneShot(at_step, fire)
+
+
+# ----------------------------------------------------- checkpoint corruption
+
+
+def _target_npz(path_dir: str, step: Optional[int]) -> str:
+    if step is None:
+        step = ckpt.latest_step(path_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint to corrupt in {path_dir}")
+    return os.path.join(path_dir, f"ckpt_{step:08d}.npz")
+
+
+def corrupt_checkpoint(path_dir: str, step: Optional[int] = None, *,
+                       nbytes: int = 64, seed: int = 0) -> str:
+    """Flip `nbytes` bytes of a checkpoint payload at deterministic,
+    seed-derived offsets (manifest left intact — the exact scenario
+    `latest_step`/`restore` must survive by CRC-falling-back)."""
+    path = _target_npz(path_dir, step)
+    size = os.path.getsize(path)
+    # deterministic LCG over the file body, skipping the zip local header
+    offsets, x = [], (seed * 2654435761 + 12345) & 0x7FFFFFFF
+    lo = min(128, size - 1)
+    for _ in range(nbytes):
+        x = (1103515245 * x + 12345) & 0x7FFFFFFF
+        offsets.append(lo + x % max(size - lo, 1))
+    with open(path, "r+b") as f:
+        for off in offsets:
+            f.seek(off)
+            b = f.read(1)
+            f.seek(off)
+            f.write(bytes([b[0] ^ 0xFF]))
+    return path
+
+
+def truncate_checkpoint(path_dir: str, step: Optional[int] = None, *,
+                        keep_frac: float = 0.5) -> str:
+    """Truncate a checkpoint payload (the crashed-writer/partial-flush
+    scenario — though the atomic-rename protocol means this can only be
+    observed via external interference, which is what we simulate)."""
+    path = _target_npz(path_dir, step)
+    size = os.path.getsize(path)
+    with open(path, "r+b") as f:
+        f.truncate(max(int(size * keep_frac), 1))
+    return path
+
+
+def delete_checkpoint_payload(path_dir: str, step: Optional[int] = None) -> str:
+    """Remove the .npz but leave its manifest — the orphaned-manifest
+    scenario `latest_step` must skip."""
+    path = _target_npz(path_dir, step)
+    os.remove(path)
+    return path
+
+
+def flaky(fn: Callable, fail_times: int, exc: type = OSError) -> Callable:
+    """Wrap a callable to raise `exc` on its first `fail_times` invocations
+    then pass through (async-writer crash + retry-with-backoff tests:
+    monkeypatch `checkpoint.save` with `flaky(checkpoint.save, 2)`)."""
+    count = {"n": 0}
+
+    def wrapped(*a, **kw):
+        if count["n"] < fail_times:
+            count["n"] += 1
+            raise exc(f"injected failure {count['n']}/{fail_times}")
+        return fn(*a, **kw)
+
+    return wrapped

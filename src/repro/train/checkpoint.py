@@ -1,29 +1,54 @@
-"""Checkpointing: atomic, async-capable, elastic-reshard on restore.
+"""Checkpointing: atomic, async-capable, elastic-reshard, CRC-verified.
 
-Format: one .npz per step (leaves keyed by flattened tree paths) + a JSON
-manifest (step, config fingerprint, mesh shape at save time). Writes go to a
-temp file then os.replace -> readers never observe partial checkpoints.
+Format: one .npz per step (leaves keyed by flattened tree paths) + one JSON
+manifest PER STEP (``ckpt_XXXXXXXX.manifest.json``) carrying the step, the
+leaf keys, a per-leaf CRC32 digest, and an optional config fingerprint.
+Writes go to a temp file then os.replace -> readers never observe partial
+checkpoints; the manifest is written only AFTER its .npz lands, so a
+manifest's existence implies its payload was fully flushed.
+
+Integrity contract (ROADMAP.md "Run reliability"):
+  * `latest_step` never trusts a manifest blindly — the .npz must exist and
+    parse (a deleted/corrupt payload with a surviving manifest is skipped).
+  * `restore` verifies per-leaf CRC32 digests and, when no explicit step is
+    requested, falls back to the newest checkpoint that passes verification.
+  * `AsyncCheckpointer` retries failed saves with exponential backoff on the
+    worker thread and surfaces terminal errors to the caller via
+    `raise_if_failed()` (checked by `CheckpointManager.maybe_save`).
+
 Restore accepts a target mesh/sharding tree: arrays are device_put with the
 NEW shardings, so a checkpoint taken on one mesh restores onto another
 (elastic scaling). A background thread makes saves non-blocking; `wait()`
-drains it (called before exit / preemption).
+drains it (called before exit / preemption) and is idempotent.
 
 At true multi-host scale each host would write only its addressable shards;
 this single-process container writes full arrays — the manifest layout and
-the restore-with-resharding path are identical either way (DESIGN.md Sec. 7).
+the restore-with-resharding path are identical either way.
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import queue
 import tempfile
 import threading
+import time
+import zipfile
+import zlib
 from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+
+class CheckpointError(RuntimeError):
+    """A checkpoint write failed (after async retries, if any)."""
+
+
+class CheckpointCorrupt(CheckpointError):
+    """A checkpoint payload failed parsing or CRC verification."""
 
 
 def _flatten_with_paths(tree):
@@ -36,23 +61,45 @@ def _flatten_with_paths(tree):
     return out
 
 
+def _crc(arr: np.ndarray) -> int:
+    return zlib.crc32(np.ascontiguousarray(arr).tobytes()) & 0xFFFFFFFF
+
+
+def fingerprint(*objs: Any) -> str:
+    """Stable config fingerprint (dataclass reprs are deterministic)."""
+    h = hashlib.sha256()
+    for o in objs:
+        h.update(repr(o).encode())
+    return h.hexdigest()[:16]
+
+
+def _ckpt_name(step: int) -> str:
+    return f"ckpt_{step:08d}.npz"
+
+
+def _manifest_name(step: int) -> str:
+    return f"ckpt_{step:08d}.manifest.json"
+
+
 def save(path_dir: str, state: Any, step: int, *, meta: Optional[dict] = None,
          keep_last: int = 3) -> str:
     os.makedirs(path_dir, exist_ok=True)
     leaves = _flatten_with_paths(state)
     arrays = {k: np.asarray(jax.device_get(v)) for k, v in leaves.items()}
-    fname = os.path.join(path_dir, f"ckpt_{step:08d}.npz")
+    fname = os.path.join(path_dir, _ckpt_name(step))
     fd, tmp = tempfile.mkstemp(dir=path_dir, suffix=".npz.tmp")
     os.close(fd)
     with open(tmp, "wb") as f:
         np.savez(f, **arrays)
     os.replace(tmp, fname)
     manifest = {"step": step, "file": os.path.basename(fname),
-                "keys": sorted(arrays.keys()), **(meta or {})}
+                "keys": sorted(arrays.keys()),
+                "crc32": {k: _crc(v) for k, v in arrays.items()},
+                **(meta or {})}
     mtmp = fname + ".manifest.tmp"
     with open(mtmp, "w") as f:
         json.dump(manifest, f)
-    os.replace(mtmp, os.path.join(path_dir, "manifest.json"))
+    os.replace(mtmp, os.path.join(path_dir, _manifest_name(step)))
     _gc(path_dir, keep_last)
     return fname
 
@@ -61,32 +108,121 @@ def _gc(path_dir: str, keep_last: int) -> None:
     ckpts = sorted(f for f in os.listdir(path_dir)
                    if f.startswith("ckpt_") and f.endswith(".npz"))
     for f in ckpts[:-keep_last]:
-        try:
-            os.remove(os.path.join(path_dir, f))
-        except OSError:
-            pass
+        for victim in (f, f[:-len(".npz")] + ".manifest.json"):
+            try:
+                os.remove(os.path.join(path_dir, victim))
+            except OSError:
+                pass
+    # Orphaned temp files from crashed writers: only the (single) writer
+    # thread creates these and it replaces its own before calling _gc, so
+    # anything still here belongs to a dead process.
+    for f in os.listdir(path_dir):
+        if f.endswith(".npz.tmp") or f.endswith(".manifest.tmp"):
+            try:
+                os.remove(os.path.join(path_dir, f))
+            except OSError:
+                pass
 
 
-def latest_step(path_dir: str) -> Optional[int]:
-    mf = os.path.join(path_dir, "manifest.json")
-    if not os.path.exists(mf):
+def _manifest_steps(path_dir: str) -> list[int]:
+    """Steps with a manifest on disk, newest first."""
+    steps = []
+    for f in os.listdir(path_dir):
+        if f.startswith("ckpt_") and f.endswith(".manifest.json"):
+            try:
+                steps.append(int(f[len("ckpt_"):len("ckpt_") + 8]))
+            except ValueError:
+                pass
+    return sorted(steps, reverse=True)
+
+
+def read_manifest(path_dir: str, step: int) -> Optional[dict]:
+    try:
+        with open(os.path.join(path_dir, _manifest_name(step))) as f:
+            return json.load(f)
+    except (OSError, json.JSONDecodeError):
         return None
-    with open(mf) as f:
-        return json.load(f)["step"]
+
+
+def _payload_parses(path_dir: str, manifest: dict) -> bool:
+    """Cheap structural check: .npz exists, is a valid zip, members match."""
+    path = os.path.join(path_dir, manifest.get("file", ""))
+    if not os.path.exists(path):
+        return False
+    try:
+        with zipfile.ZipFile(path) as z:
+            names = {n[:-4] for n in z.namelist() if n.endswith(".npy")}
+    except (zipfile.BadZipFile, OSError):
+        return False
+    return names == set(manifest.get("keys", []))
+
+
+def verify(path_dir: str, step: int) -> bool:
+    """Deep check: payload parses AND every leaf matches its CRC32 digest."""
+    manifest = read_manifest(path_dir, step)
+    if manifest is None or not _payload_parses(path_dir, manifest):
+        return False
+    digests = manifest.get("crc32")
+    if digests is None:  # pre-integrity checkpoint: structural check only
+        return True
+    try:
+        with np.load(os.path.join(path_dir, manifest["file"])) as data:
+            for key in manifest["keys"]:
+                if _crc(data[key]) != digests.get(key):
+                    return False
+    except (OSError, ValueError, zipfile.BadZipFile, KeyError):
+        return False
+    return True
+
+
+def latest_step(path_dir: str, *, verified: bool = False) -> Optional[int]:
+    """Newest step whose checkpoint actually exists and parses.
+
+    A surviving manifest whose .npz was deleted or corrupted is skipped
+    (older checkpoints are consulted in turn). With ``verified=True`` the
+    full per-leaf CRC32 digests are checked, not just the zip structure.
+    """
+    if not os.path.isdir(path_dir):
+        return None
+    for step in _manifest_steps(path_dir):
+        if verified:
+            if verify(path_dir, step):
+                return step
+        else:
+            manifest = read_manifest(path_dir, step)
+            if manifest is not None and _payload_parses(path_dir, manifest):
+                return step
+    return None
 
 
 def restore(path_dir: str, like: Any, *, step: Optional[int] = None,
-            shardings: Any = None) -> Any:
+            shardings: Any = None, verify_crc: bool = True,
+            expect_fingerprint: Optional[str] = None) -> Any:
     """Load into the structure of `like` (arrays or ShapeDtypeStructs).
 
     shardings: optional pytree of jax.sharding.Sharding matching `like` —
     arrays are placed with these (elastic re-shard onto a new mesh).
+
+    With ``step=None`` the newest checkpoint that passes verification is
+    used (automatic fallback past corrupt files). An explicit ``step`` that
+    fails verification raises CheckpointCorrupt. ``expect_fingerprint``
+    (see `fingerprint`) rejects checkpoints from a different config.
     """
     if step is None:
-        step = latest_step(path_dir)
+        step = latest_step(path_dir, verified=verify_crc)
         if step is None:
-            raise FileNotFoundError(f"no checkpoint in {path_dir}")
-    data = np.load(os.path.join(path_dir, f"ckpt_{step:08d}.npz"))
+            raise FileNotFoundError(f"no (valid) checkpoint in {path_dir}")
+    elif verify_crc and not verify(path_dir, step):
+        raise CheckpointCorrupt(f"checkpoint step {step} in {path_dir} "
+                                f"failed CRC/structure verification")
+    manifest = read_manifest(path_dir, step)
+    if expect_fingerprint is not None and manifest is not None:
+        got = manifest.get("config_fingerprint")
+        if got is not None and got != expect_fingerprint:
+            raise CheckpointError(
+                f"config fingerprint mismatch at step {step}: checkpoint "
+                f"{got} vs expected {expect_fingerprint}")
+    data = np.load(os.path.join(path_dir, _ckpt_name(step)))
     flat = _flatten_with_paths(like)
     shard_flat = _flatten_with_paths(shardings) if shardings is not None else {}
     out = {}
@@ -109,14 +245,25 @@ def restore(path_dir: str, like: Any, *, step: Optional[int] = None,
 
 
 class AsyncCheckpointer:
-    """Fire-and-forget saves on a worker thread (off the step critical path)."""
+    """Fire-and-forget saves on a worker thread (off the step critical path).
 
-    def __init__(self, path_dir: str, keep_last: int = 3):
+    Failed saves are retried `retries` times with exponential backoff on the
+    worker; a terminally failed save lands in `.errors` and is surfaced to
+    the training loop by `raise_if_failed()` — which `CheckpointManager.
+    maybe_save` calls, so a dying filesystem aborts the run at the next save
+    point rather than silently only at `finalize()`.
+    """
+
+    def __init__(self, path_dir: str, keep_last: int = 3, *,
+                 retries: int = 3, backoff: float = 0.05):
         self.path_dir = path_dir
         self.keep_last = keep_last
+        self.retries = retries
+        self.backoff = backoff
         self._q: "queue.Queue" = queue.Queue(maxsize=2)
         self._worker = threading.Thread(target=self._run, daemon=True)
         self._worker.start()
+        self._stopped = False
         self.errors: list[BaseException] = []
 
     def _run(self):
@@ -125,18 +272,39 @@ class AsyncCheckpointer:
             if item is None:
                 return
             state_np, step, meta = item
-            try:
-                save(self.path_dir, state_np, step, meta=meta,
-                     keep_last=self.keep_last)
-            except BaseException as e:  # surfaced via .errors
-                self.errors.append(e)
+            for attempt in range(self.retries + 1):
+                try:
+                    save(self.path_dir, state_np, step, meta=meta,
+                         keep_last=self.keep_last)
+                    break
+                except BaseException as e:
+                    if attempt == self.retries:
+                        self.errors.append(e)  # surfaced via raise_if_failed
+                    else:
+                        time.sleep(self.backoff * (2 ** attempt))
 
     def submit(self, state: Any, step: int, meta: Optional[dict] = None):
+        if self._stopped:
+            raise CheckpointError("AsyncCheckpointer already drained (wait() "
+                                  "was called); create a new one")
         # device_get on the caller thread (cheap on CPU; on TPU this is the
         # D2H copy we deliberately take off the XLA stream)
         state_np = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), state)
         self._q.put((state_np, step, meta))
 
+    def raise_if_failed(self):
+        if self.errors:
+            err = self.errors[0]
+            raise CheckpointError(
+                f"async checkpoint save failed after {self.retries + 1} "
+                f"attempts: {err!r}") from err
+
     def wait(self):
+        """Drain pending saves and stop the worker. Idempotent: repeated
+        calls return immediately instead of re-queueing the stop sentinel
+        (which would block once the dead worker stops consuming)."""
+        if self._stopped:
+            return
+        self._stopped = True
         self._q.put(None)
         self._worker.join()

@@ -1,7 +1,10 @@
 """Fault tolerance: checkpoint manager, preemption handling, straggler watch.
 
-Designed for the 1000+-node posture (DESIGN.md Sec. 7):
-  * CheckpointManager: restore-on-start, periodic async saves, save-on-exit.
+Designed for the 1000+-node posture (sentinel contract: ROADMAP.md "Run
+reliability"):
+  * CheckpointManager: restore-on-start (CRC-verified, falls back past
+    corrupt checkpoints), periodic async saves with error surfacing at the
+    next save point, save-on-exit, and `rollback()` for sentinel recovery.
   * Preemption: SIGTERM/SIGINT flips a flag; the train loop checkpoints and
     exits cleanly at the next step boundary (TPU preemption notice pattern).
   * StragglerWatch: per-step wall-time EMA; steps slower than `ratio` x the
@@ -13,7 +16,7 @@ from __future__ import annotations
 
 import signal
 import time
-from typing import Any, Optional
+from typing import Any, Callable, Optional
 
 from repro.train import checkpoint as ckpt
 
@@ -37,16 +40,18 @@ class PreemptionGuard:
 
 
 class StragglerWatch:
-    def __init__(self, ratio: float = 2.0, momentum: float = 0.1):
+    def __init__(self, ratio: float = 2.0, momentum: float = 0.1,
+                 clock: Optional[Callable[[], float]] = None):
         self.ratio = ratio
         self.momentum = momentum
+        self.clock = clock  # injectable for deterministic tests
         self.ema: Optional[float] = None
         self.flags = 0
         self._last: Optional[float] = None
 
     def tick(self) -> bool:
         """Call once per step; returns True when the step was a straggler."""
-        now = time.monotonic()
+        now = self.clock() if self.clock is not None else time.monotonic()
         if self._last is None:
             self._last = now
             return False
@@ -63,29 +68,61 @@ class StragglerWatch:
 
 class CheckpointManager:
     def __init__(self, path_dir: str, save_every: int = 100, keep_last: int = 3,
-                 async_io: bool = True):
+                 async_io: bool = True, expect_fingerprint: Optional[str] = None):
         self.path_dir = path_dir
         self.save_every = save_every
         self.async_ = ckpt.AsyncCheckpointer(path_dir, keep_last) if async_io else None
         self.keep_last = keep_last
+        self.expect_fingerprint = expect_fingerprint
         self.guard = PreemptionGuard()
         self.straggler = StragglerWatch()
 
+    def _meta(self) -> Optional[dict]:
+        if self.expect_fingerprint is None:
+            return None
+        return {"config_fingerprint": self.expect_fingerprint}
+
     def restore_or_init(self, init_fn, like: Any, shardings: Any = None):
-        step = ckpt.latest_step(self.path_dir)
+        """Restore the newest checkpoint that passes CRC verification, or
+        init fresh when none survives. Corrupt/truncated checkpoints are
+        skipped automatically (older ones are consulted in turn)."""
+        step = ckpt.latest_step(self.path_dir, verified=True)
         if step is None:
             return init_fn(), 0
-        state = ckpt.restore(self.path_dir, like, step=step, shardings=shardings)
+        state = ckpt.restore(self.path_dir, like, step=step, shardings=shardings,
+                             expect_fingerprint=self.expect_fingerprint)
+        return state, step
+
+    def rollback(self, like: Any, shardings: Any = None):
+        """Sentinel recovery: newest VERIFIED checkpoint, or None when no
+        checkpoint survives verification. Pending async saves are drained
+        errors-tolerated first so an in-flight write can land before we
+        pick the rollback target."""
+        if self.async_ is not None:
+            # wait for in-flight submits without tearing the worker down:
+            # poll until the queue drains (saves are seconds at most).
+            while not self.async_._q.empty():
+                time.sleep(0.01)
+        step = ckpt.latest_step(self.path_dir, verified=True)
+        if step is None:
+            return None
+        state = ckpt.restore(self.path_dir, like, step=step, shardings=shardings,
+                             expect_fingerprint=self.expect_fingerprint)
         return state, step
 
     def maybe_save(self, state: Any, step: int, *, force: bool = False) -> bool:
+        """Periodic/forced save. Raises CheckpointError here (not only in
+        finalize) when a previous async save terminally failed."""
+        if self.async_ is not None:
+            self.async_.raise_if_failed()
         due = force or self.guard.requested or (step > 0 and step % self.save_every == 0)
         if not due:
             return False
         if self.async_ is not None:
-            self.async_.submit(state, step)
+            self.async_.submit(state, step, meta=self._meta())
         else:
-            ckpt.save(self.path_dir, state, step, keep_last=self.keep_last)
+            ckpt.save(self.path_dir, state, step, meta=self._meta(),
+                      keep_last=self.keep_last)
         return True
 
     def should_stop(self) -> bool:
@@ -94,5 +131,4 @@ class CheckpointManager:
     def finalize(self):
         if self.async_ is not None:
             self.async_.wait()
-            if self.async_.errors:
-                raise self.async_.errors[0]
+            self.async_.raise_if_failed()

@@ -1,0 +1,249 @@
+"""Run sentinel: variation-aware anomaly detection + rollback recovery.
+
+Low-bit QAT is unstable by construction — the paper's central claim.  Module
+sensitivity, activation outliers (Bondarenko'21), and weight oscillation
+(Eq. 11-12) all show up at run time as a small set of observable pathologies:
+
+  * non-finite loss / gradients        (overflow through a collapsed module)
+  * sudden loss spikes                 (outlier batch x oscillating quantizer)
+  * LSQ scale collapse / explosion     (scale -> 0 kills the STE gradient;
+                                        scale -> inf saturates every bin)
+  * oscillation-fraction spikes        (Eq. 12 EMA jumping across the fleet)
+
+The repo already *measures* these (core/oscillation.py, train_step metrics);
+this module turns the telemetry into actuators, in two layers:
+
+1. **In-step health checks** (`health_check`, jit-compatible, called inside
+   `train_step`): produce a per-step `health` bitmask in the metrics and a
+   fatal verdict. On a fatal verdict the train step passes params/opt-state
+   through UNCHANGED — a poisoned update never reaches the weights, at the
+   cost of one wasted batch.
+
+2. **Host-side recovery** (`SentinelRunner`, driven by `launch/train.py`):
+   after `k_consecutive` fatal steps the runner rolls back to the newest
+   CRC-verified checkpoint (train/checkpoint.py manifests), applies an LR
+   backoff factor (`lr_scale` inside `SentinelState`, honored by the jitted
+   step without recompilation), and resumes — with bounded retries before
+   surfacing a hard `SentinelAbort`.
+
+The sentinel contract is documented in ROADMAP.md ("Run reliability").
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------- health bits
+OK = 0
+NONFINITE_LOSS = 1 << 0   # loss is NaN/inf
+NONFINITE_GRAD = 1 << 1   # any gradient leaf contains NaN/inf
+LOSS_SPIKE = 1 << 2       # z-score of loss vs its EMA exceeds z_max
+SCALE_COLLAPSE = 1 << 3   # some quantizer scale |s| < scale_min (or non-finite)
+SCALE_EXPLODE = 1 << 4    # some quantizer scale |s| > scale_max
+OSC_SPIKE = 1 << 5        # oscillation fraction (Eq. 12) above osc_frac_max
+
+#: bits that skip the update by default. OSC_SPIKE is advisory: a high
+#: oscillation fraction degrades convergence but the update is still sound.
+DEFAULT_FATAL = (NONFINITE_LOSS | NONFINITE_GRAD | LOSS_SPIKE
+                 | SCALE_COLLAPSE | SCALE_EXPLODE)
+
+BIT_NAMES = {NONFINITE_LOSS: "nonfinite_loss", NONFINITE_GRAD: "nonfinite_grad",
+             LOSS_SPIKE: "loss_spike", SCALE_COLLAPSE: "scale_collapse",
+             SCALE_EXPLODE: "scale_explode", OSC_SPIKE: "osc_spike"}
+
+
+def describe(bits: int) -> str:
+    """Human-readable rendering of a health bitmask ('ok' when clean)."""
+    names = [n for b, n in sorted(BIT_NAMES.items()) if bits & b]
+    return "+".join(names) if names else "ok"
+
+
+@dataclasses.dataclass(frozen=True)
+class SentinelConfig:
+    """Static sentinel policy (hashable; closed over by the jitted step)."""
+
+    # --- jit-side detection thresholds ---
+    loss_momentum: float = 0.02   # EMA momentum for loss mean/second-moment
+    z_max: float = 6.0            # loss z-score above which a step is a spike
+    spike_warmup: int = 20        # healthy steps before the spike guard arms
+    scale_min: float = 1e-7       # |scale| below this = collapsed quantizer
+    scale_max: float = 1e4        # |scale| above this = exploded quantizer
+    osc_frac_max: float = 0.5     # Eq. 12 oscillation fraction alarm level
+    fatal_bits: int = DEFAULT_FATAL
+    # --- host-side recovery policy (SentinelRunner) ---
+    k_consecutive: int = 3        # fatal streak length that triggers rollback
+    max_retries: int = 3          # rollbacks before SentinelAbort
+    lr_backoff: float = 0.5       # lr_scale multiplier applied per rollback
+
+
+class SentinelState(NamedTuple):
+    """Per-run sentinel telemetry, carried inside the train state pytree
+    (checkpointed with it, so recovery restores a consistent EMA)."""
+
+    loss_ema: jax.Array   # f32 scalar: EMA of healthy losses
+    loss_sq: jax.Array    # f32 scalar: EMA of healthy squared losses
+    obs: jax.Array        # i32 scalar: healthy observations folded into EMA
+    lr_scale: jax.Array   # f32 scalar: multiplicative LR backoff (host-set)
+    skipped: jax.Array    # i32 scalar: total updates skipped as fatal
+
+
+def init_sentinel_state() -> SentinelState:
+    return SentinelState(loss_ema=jnp.zeros((), jnp.float32),
+                         loss_sq=jnp.zeros((), jnp.float32),
+                         obs=jnp.zeros((), jnp.int32),
+                         lr_scale=jnp.ones((), jnp.float32),
+                         skipped=jnp.zeros((), jnp.int32))
+
+
+def _tree_all_finite(tree) -> jax.Array:
+    leaves = [l for l in jax.tree.leaves(tree)
+              if jnp.issubdtype(jnp.asarray(l).dtype, jnp.floating)]
+    if not leaves:
+        return jnp.asarray(True)
+    flags = [jnp.all(jnp.isfinite(l)) for l in leaves]
+    return jnp.stack(flags).all()
+
+
+def health_check(loss: jax.Array, grads, leaves, osc_frac: Optional[jax.Array],
+                 st: SentinelState, scfg: SentinelConfig):
+    """Pure, jit-compatible. Returns ``(bits, fatal, new_state)``.
+
+    loss:     scalar train loss for this step (pre-update)
+    grads:    gradient pytree (post-accumulation, pre-optimizer)
+    leaves:   ``quant_leaves(params, qcfg)`` triples — scales are inspected
+    osc_frac: mean Eq. 12 oscillation fraction from the PREVIOUS step's
+              telemetry (None when tracking is off)
+    st:       sentinel state from the previous step
+
+    The loss EMA/second-moment update only folds in HEALTHY steps, so a NaN
+    or spiked loss never poisons the statistics it is judged against.
+    """
+    loss = jnp.asarray(loss, jnp.float32)
+    bits = jnp.zeros((), jnp.int32)
+
+    loss_ok = jnp.isfinite(loss)
+    bits |= jnp.where(loss_ok, 0, NONFINITE_LOSS)
+    bits |= jnp.where(_tree_all_finite(grads), 0, NONFINITE_GRAD)
+
+    # Loss-spike guard: z-score against a running mean/variance of healthy
+    # losses. Armed only after `spike_warmup` healthy observations.
+    var = jnp.maximum(st.loss_sq - st.loss_ema ** 2, 0.0)
+    z = (loss - st.loss_ema) * jax.lax.rsqrt(var + 1e-12)
+    armed = st.obs >= scfg.spike_warmup
+    spike = armed & loss_ok & (z > scfg.z_max)
+    bits |= jnp.where(spike, LOSS_SPIKE, 0)
+
+    # Quantizer scale health over every quantized leaf (w_scale tensors are
+    # tiny — per-tensor/per-head/per-expert — so this check is ~free).
+    if leaves:
+        scales = [jnp.abs(jnp.ravel(jnp.asarray(s, jnp.float32)))
+                  for _, s, _ in leaves]
+        flat = jnp.concatenate(scales)
+        finite = jnp.isfinite(flat)
+        collapsed = jnp.any(~finite | (flat < scfg.scale_min))
+        exploded = jnp.any(finite & (flat > scfg.scale_max))
+        bits |= jnp.where(collapsed, SCALE_COLLAPSE, 0)
+        bits |= jnp.where(exploded, SCALE_EXPLODE, 0)
+
+    if osc_frac is not None:
+        bits |= jnp.where(osc_frac > scfg.osc_frac_max, OSC_SPIKE, 0)
+
+    fatal = (bits & scfg.fatal_bits) != 0
+
+    # Fold only healthy, finite losses into the EMA; bootstrap from the first
+    # healthy observation so step 0 never registers as a spike.
+    upd = (~fatal) & loss_ok
+    m = scfg.loss_momentum
+    first = st.obs == 0
+    ema = jnp.where(first, loss, (1.0 - m) * st.loss_ema + m * loss)
+    sq = jnp.where(first, loss ** 2, (1.0 - m) * st.loss_sq + m * loss ** 2)
+    new = SentinelState(
+        loss_ema=jnp.where(upd, ema, st.loss_ema),
+        loss_sq=jnp.where(upd, sq, st.loss_sq),
+        obs=st.obs + upd.astype(jnp.int32),
+        lr_scale=st.lr_scale,
+        skipped=st.skipped + fatal.astype(jnp.int32))
+    return bits, fatal, new
+
+
+def select_update(fatal: jax.Array, old_tree, new_tree):
+    """Pass the old tree through unchanged when ``fatal`` (scalar bool)."""
+    return jax.tree.map(lambda o, n: jnp.where(fatal, o, n),
+                        old_tree, new_tree)
+
+
+def apply_lr_backoff(state: dict, factor: float) -> dict:
+    """Host-side: multiply the sentinel lr_scale (used after a rollback).
+
+    Returns a shallow-copied state dict; the jitted step picks the new scale
+    up on the next call without recompiling (it is a traced scalar).
+    """
+    sent = state["sent"]
+    out = dict(state)
+    out["sent"] = sent._replace(
+        lr_scale=jnp.asarray(sent.lr_scale, jnp.float32) * factor)
+    return out
+
+
+class SentinelAbort(RuntimeError):
+    """Raised when recovery retries are exhausted (hard failure)."""
+
+
+class SentinelRunner:
+    """Host-side recovery driver around a CheckpointManager.
+
+    Usage (see launch/train.py):
+
+        runner = SentinelRunner(scfg, mgr, like, shardings)
+        ...
+        state, m = step(state, batch)
+        verdict = runner.observe(int(m["health"]))
+        if verdict:                       # k consecutive fatal steps
+            state, resume = runner.rollback(state)
+    """
+
+    def __init__(self, scfg: SentinelConfig, mgr, like, shardings=None):
+        self.scfg = scfg
+        self.mgr = mgr
+        self.like = like
+        self.shardings = shardings
+        self.fatal_streak = 0
+        self.retries = 0
+        self.rollbacks = 0
+
+    def observe(self, bits: int) -> bool:
+        """Feed one step's health bitmask; True => roll back now."""
+        if bits & self.scfg.fatal_bits:
+            self.fatal_streak += 1
+        else:
+            self.fatal_streak = 0
+        return self.fatal_streak >= self.scfg.k_consecutive
+
+    def rollback(self, state: dict):
+        """Restore the newest verified checkpoint and apply LR backoff.
+
+        Returns ``(state, resume_step)`` where ``resume_step`` is the loop
+        index to continue FROM (checkpoint label + 1). Raises SentinelAbort
+        when retries are exhausted or no verified checkpoint survives.
+        """
+        if self.retries >= self.scfg.max_retries:
+            raise SentinelAbort(
+                f"{self.retries} rollbacks exhausted; last streak of "
+                f"{self.fatal_streak} fatal steps did not recover")
+        restored = self.mgr.rollback(self.like, shardings=self.shardings)
+        if restored is None:
+            raise SentinelAbort("no verified checkpoint available to roll "
+                                "back to (all corrupt or none saved yet)")
+        new_state, step = restored
+        if "sent" in state and "sent" in new_state:
+            # keep the *current* backoff history, not the checkpointed one
+            new_state["sent"] = new_state["sent"]._replace(
+                lr_scale=jnp.asarray(state["sent"].lr_scale, jnp.float32))
+        new_state = apply_lr_backoff(new_state, self.scfg.lr_backoff)
+        self.retries += 1
+        self.rollbacks += 1
+        self.fatal_streak = 0
+        return new_state, step + 1

@@ -4,11 +4,13 @@ Kept as a plain dict pytree so sharding-spec trees mirror it trivially.
 Layout:
   {"params": ..., "mu": ..., "nu": ..., "step": int32 scalar,
    "osc": tuple[OscState, ...] | (),   # one per quant leaf, Eq. 11-12
-   "err": grads-shaped tree | ()}      # error feedback for compression
+   "err": grads-shaped tree | (),      # error feedback for compression
+   "sent": SentinelState | ()}         # run-sentinel telemetry (sentinel.py)
 """
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -20,6 +22,7 @@ from repro.models.model import init_params, quant_leaves
 from repro.optim import adamw
 from repro.optim.adamw import AdamWConfig
 from repro.optim.grad_compress import init_error_tree
+from repro.train.sentinel import SentinelConfig, init_sentinel_state
 
 
 @dataclasses.dataclass(frozen=True)
@@ -34,6 +37,9 @@ class TrainConfig:
     compress_grads: bool = False
     lr_schedule: str = "cosine"
     adamw: AdamWConfig = AdamWConfig()
+    # Run sentinel (train/sentinel.py): None disables in-step health checks
+    # (the `--no-sentinel` benchmark escape hatch in launch/train.py).
+    sentinel: Optional[SentinelConfig] = None
 
     def replace(self, **kw) -> "TrainConfig":
         return dataclasses.replace(self, **kw)
@@ -49,10 +55,13 @@ def init_state(key, cfg: ArchConfig, qcfg: QuantConfig, tcfg: TrainConfig) -> di
         "step": jnp.zeros((), jnp.int32),
         "osc": (),
         "err": (),
+        "sent": (),
     }
     if qcfg.track_oscillation:
         state["osc"] = tuple(init_osc_state(w, s, spec)
                              for w, s, spec in quant_leaves(params, qcfg))
     if tcfg.compress_grads:
         state["err"] = init_error_tree(params)
+    if tcfg.sentinel is not None:
+        state["sent"] = init_sentinel_state()
     return state

@@ -24,6 +24,7 @@ from repro.core.policy import QuantConfig
 from repro.models.model import forward, quant_leaves
 from repro.optim import adamw, schedule
 from repro.optim.grad_compress import compress_tree
+from repro.train import sentinel as sent
 from repro.train.state import TrainConfig
 
 Constrain = Callable[[jax.Array], jax.Array]
@@ -122,6 +123,21 @@ def make_train_step(cfg: ArchConfig, qcfg: QuantConfig, tcfg: TrainConfig, *,
         if tcfg.compress_grads:
             grads, new_err = compress_tree(grads, state["err"])
 
+        # Run sentinel (sentinel.py): in-step health verdict BEFORE the
+        # optimizer touches anything. Fatal => the whole update below is
+        # computed but discarded (params/opt-state pass through unchanged);
+        # jnp.where keeps this jit/donation-friendly with no reshape.
+        fatal = None
+        if tcfg.sentinel is not None:
+            osc_prev = None
+            if qcfg.track_oscillation and state["osc"]:
+                osc_prev = jnp.mean(jnp.stack(
+                    [oscillation_fraction(st, qcfg.osc_threshold)
+                     for st in state["osc"]]))
+            health, fatal, new_sent = sent.health_check(
+                loss, grads, quant_leaves(params, qcfg), osc_prev,
+                state["sent"], tcfg.sentinel)
+
         if tcfg.lr_schedule == "linear":
             lr = schedule.linear_warmup_decay(
                 step, peak=tcfg.adamw.lr_peak, warmup_steps=tcfg.warmup_steps,
@@ -130,6 +146,10 @@ def make_train_step(cfg: ArchConfig, qcfg: QuantConfig, tcfg: TrainConfig, *,
             lr = schedule.warmup_cosine(
                 step, peak=tcfg.adamw.lr_peak, warmup_steps=tcfg.warmup_steps,
                 total_steps=tcfg.total_steps)
+        if tcfg.sentinel is not None:
+            # rollback recovery LR backoff — a traced scalar, so the host can
+            # shrink it (sentinel.apply_lr_backoff) without recompilation.
+            lr = lr * state["sent"].lr_scale
 
         opt = adamw.AdamWState(state["mu"], state["nu"])
         new_params, new_opt, opt_metrics = adamw.update(
@@ -145,9 +165,23 @@ def make_train_step(cfg: ArchConfig, qcfg: QuantConfig, tcfg: TrainConfig, *,
                      for st in new_osc]
             metrics["osc_frac"] = jnp.mean(jnp.stack(fracs))
 
+        new_sentinel = state["sent"]
+        if fatal is not None:
+            new_params = sent.select_update(fatal, params, new_params)
+            new_mu = sent.select_update(fatal, state["mu"], new_opt.mu)
+            new_nu = sent.select_update(fatal, state["nu"], new_opt.nu)
+            new_opt = adamw.AdamWState(new_mu, new_nu)
+            new_osc = sent.select_update(fatal, state["osc"], new_osc)
+            new_err = sent.select_update(fatal, state["err"], new_err)
+            new_sentinel = new_sent
+            metrics["health"] = health
+            metrics["lr_scale"] = state["sent"].lr_scale
+            metrics["sentinel_skipped"] = new_sent.skipped
+
         metrics.update({"loss": loss, "lr": lr, **opt_metrics})
         new_state = {"params": new_params, "mu": new_opt.mu, "nu": new_opt.nu,
-                     "step": step + 1, "osc": new_osc, "err": new_err}
+                     "step": step + 1, "osc": new_osc, "err": new_err,
+                     "sent": new_sentinel}
         return new_state, metrics
 
     return train_step

@@ -82,6 +82,92 @@ def test_manager_restore_or_init(tmp_path, key):
     mgr.finalize()
 
 
+def test_latest_step_ignores_orphaned_manifest(tmp_path, key):
+    """A surviving manifest whose .npz was deleted must not be trusted —
+    restore_or_init used to crash at startup on exactly this state."""
+    state = _state(key)
+    ckpt.save(str(tmp_path), state, 2, keep_last=5)
+    ckpt.save(str(tmp_path), state, 4, keep_last=5)
+    os.remove(tmp_path / "ckpt_00000004.npz")
+    assert ckpt.latest_step(str(tmp_path)) == 2
+    mgr = CheckpointManager(str(tmp_path), async_io=False)
+    like = jax.eval_shape(lambda: state)
+    restored, start = mgr.restore_or_init(lambda: _state(key), like)
+    assert start == 2  # fell back instead of crashing
+    mgr.guard.restore_handlers()
+
+
+def test_latest_step_none_when_all_orphaned(tmp_path, key):
+    ckpt.save(str(tmp_path), _state(key), 1)
+    os.remove(tmp_path / "ckpt_00000001.npz")
+    assert ckpt.latest_step(str(tmp_path)) is None
+
+
+def test_gc_removes_orphaned_tmp_files(tmp_path, key):
+    """Crashed writers leave *.npz.tmp / *.manifest.tmp behind; the next
+    save's _gc sweeps them."""
+    (tmp_path / "tmpabc123.npz.tmp").write_bytes(b"partial write")
+    (tmp_path / "ckpt_00000009.npz.manifest.tmp").write_text("{}")
+    ckpt.save(str(tmp_path), _state(key), 1)
+    left = [f for f in os.listdir(tmp_path) if f.endswith(".tmp")]
+    assert left == []
+    assert ckpt.latest_step(str(tmp_path)) == 1
+
+
+def test_gc_removes_manifest_with_payload(tmp_path, key):
+    state = _state(key)
+    for s in (1, 2, 3, 4):
+        ckpt.save(str(tmp_path), state, s, keep_last=2)
+    files = sorted(os.listdir(tmp_path))
+    assert "ckpt_00000001.manifest.json" not in files
+    assert "ckpt_00000003.manifest.json" in files
+
+
+def test_async_wait_idempotent(tmp_path, key):
+    ac = ckpt.AsyncCheckpointer(str(tmp_path))
+    ac.submit(_state(key), 1)
+    ac.wait()
+    ac.wait()  # second call must return immediately, not hang on a re-put
+    ac.wait()
+    assert ckpt.latest_step(str(tmp_path)) == 1
+    with pytest.raises(ckpt.CheckpointError):
+        ac.submit(_state(key), 2)  # drained checkpointer rejects new work
+
+
+def test_crc_verification_roundtrip(tmp_path, key):
+    state = _state(key)
+    ckpt.save(str(tmp_path), state, 3)
+    assert ckpt.verify(str(tmp_path), 3)
+    assert ckpt.latest_step(str(tmp_path), verified=True) == 3
+    # flip one payload byte -> deep verification fails
+    path = tmp_path / "ckpt_00000003.npz"
+    data = bytearray(path.read_bytes())
+    data[len(data) // 2] ^= 0xFF
+    path.write_bytes(bytes(data))
+    assert not ckpt.verify(str(tmp_path), 3)
+    assert ckpt.latest_step(str(tmp_path), verified=True) is None
+
+
+def test_config_fingerprint_mismatch_rejected(tmp_path, key):
+    state = _state(key)
+    fp = ckpt.fingerprint(CFG, QCFG)
+    ckpt.save(str(tmp_path), state, 1, meta={"config_fingerprint": fp})
+    like = jax.eval_shape(lambda: state)
+    ckpt.restore(str(tmp_path), like, expect_fingerprint=fp)  # ok
+    with pytest.raises(ckpt.CheckpointError):
+        ckpt.restore(str(tmp_path), like, expect_fingerprint="deadbeef")
+
+
+def test_straggler_watch_injected_clock():
+    """Deterministic straggler detection with a fake monotonic clock."""
+    times = iter([0.0, 1.0, 2.0, 3.0, 10.0, 10.5])
+    sw = StragglerWatch(ratio=2.0, clock=lambda: next(times))
+    flags = [sw.tick() for _ in range(6)]
+    assert flags == [False, False, False, False, True, False]
+    assert sw.flags == 1
+    assert sw.ema is not None and sw.ema > 1.0  # the slow step raised the EMA
+
+
 def test_straggler_watch(monkeypatch):
     sw = StragglerWatch(ratio=2.0)
     times = iter([0.0, 1.0, 2.0, 3.0, 10.0])

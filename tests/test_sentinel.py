@@ -1,0 +1,164 @@
+"""Run sentinel unit tests: health bitmask semantics, EMA hygiene, update
+selection, LR backoff, and the host-side recovery driver (pure — no model;
+the jit-integrated and end-to-end paths live in test_sentinel_faults.py)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.train import sentinel as S
+
+
+def _warm(ema=1.0, var=0.01, obs=100, lr_scale=1.0, skipped=0):
+    return S.SentinelState(loss_ema=jnp.float32(ema),
+                           loss_sq=jnp.float32(var + ema ** 2),
+                           obs=jnp.int32(obs),
+                           lr_scale=jnp.float32(lr_scale),
+                           skipped=jnp.int32(skipped))
+
+
+CFG = S.SentinelConfig()
+GRADS = {"a": jnp.ones((3,)), "b": (jnp.zeros((2, 2)),)}
+
+
+def _leaves(scale):
+    return [(jnp.ones((4, 4)), jnp.full((), scale, jnp.float32), None)]
+
+
+def test_healthy_step_updates_ema():
+    bits, fatal, st = S.health_check(jnp.float32(1.05), GRADS, _leaves(0.1),
+                                     None, _warm(), CFG)
+    assert int(bits) == S.OK and not bool(fatal)
+    assert int(st.obs) == 101 and int(st.skipped) == 0
+    assert abs(float(st.loss_ema) - 1.0) < 0.01  # EMA drifted toward 1.05
+
+
+def test_nonfinite_loss_detected():
+    bits, fatal, st = S.health_check(jnp.float32(np.nan), GRADS, _leaves(0.1),
+                                     None, _warm(), CFG)
+    assert int(bits) & S.NONFINITE_LOSS and bool(fatal)
+    assert int(st.skipped) == 1
+    # fatal loss must NOT be folded into the EMA statistics
+    assert float(st.loss_ema) == 1.0 and int(st.obs) == 100
+
+
+def test_nonfinite_grad_detected():
+    bad = {"a": jnp.ones((3,)), "b": (jnp.asarray([[1.0, np.inf], [0, 0]]),)}
+    bits, fatal, _ = S.health_check(jnp.float32(1.0), bad, _leaves(0.1),
+                                    None, _warm(), CFG)
+    assert int(bits) & S.NONFINITE_GRAD and bool(fatal)
+
+
+def test_loss_spike_z_score():
+    # ema=1, var=0.01 -> sigma=0.1; loss=10 is z=90 >> z_max
+    bits, fatal, st = S.health_check(jnp.float32(10.0), GRADS, _leaves(0.1),
+                                     None, _warm(), CFG)
+    assert int(bits) & S.LOSS_SPIKE and bool(fatal)
+    assert float(st.loss_ema) == 1.0  # spike not folded in
+
+
+def test_spike_guard_unarmed_during_warmup():
+    st = _warm(obs=CFG.spike_warmup - 1)
+    bits, fatal, _ = S.health_check(jnp.float32(10.0), GRADS, _leaves(0.1),
+                                    None, st, CFG)
+    assert not (int(bits) & S.LOSS_SPIKE) and not bool(fatal)
+
+
+def test_first_observation_bootstraps_ema():
+    st = _warm(ema=0.0, var=0.0, obs=0)
+    _, _, new = S.health_check(jnp.float32(7.5), GRADS, [], None, st, CFG)
+    assert float(new.loss_ema) == 7.5 and int(new.obs) == 1
+
+
+def test_scale_collapse_and_explode():
+    bits, fatal, _ = S.health_check(jnp.float32(1.0), GRADS, _leaves(0.0),
+                                    None, _warm(), CFG)
+    assert int(bits) & S.SCALE_COLLAPSE and bool(fatal)
+    bits, fatal, _ = S.health_check(jnp.float32(1.0), GRADS, _leaves(1e6),
+                                    None, _warm(), CFG)
+    assert int(bits) & S.SCALE_EXPLODE and bool(fatal)
+    bits, fatal, _ = S.health_check(jnp.float32(1.0), GRADS,
+                                    _leaves(np.nan), None, _warm(), CFG)
+    assert int(bits) & S.SCALE_COLLAPSE and bool(fatal)
+
+
+def test_osc_spike_is_advisory_not_fatal():
+    bits, fatal, _ = S.health_check(jnp.float32(1.0), GRADS, _leaves(0.1),
+                                    jnp.float32(0.9), _warm(), CFG)
+    assert int(bits) & S.OSC_SPIKE
+    assert not bool(fatal)  # default fatal_bits excludes OSC_SPIKE
+
+
+def test_describe_bitmask():
+    assert S.describe(0) == "ok"
+    assert "nonfinite_loss" in S.describe(S.NONFINITE_LOSS | S.LOSS_SPIKE)
+    assert "loss_spike" in S.describe(S.NONFINITE_LOSS | S.LOSS_SPIKE)
+
+
+def test_select_update_passthrough():
+    old = {"w": jnp.zeros((2,)), "t": (jnp.zeros(()),)}
+    new = {"w": jnp.ones((2,)), "t": (jnp.ones(()),)}
+    kept = S.select_update(jnp.asarray(True), old, new)
+    assert float(kept["w"][0]) == 0.0 and float(kept["t"][0]) == 0.0
+    taken = S.select_update(jnp.asarray(False), old, new)
+    assert float(taken["w"][0]) == 1.0
+
+
+def test_apply_lr_backoff():
+    state = {"sent": _warm(lr_scale=1.0), "params": {}}
+    out = S.apply_lr_backoff(state, 0.5)
+    assert float(out["sent"].lr_scale) == 0.5
+    assert float(state["sent"].lr_scale) == 1.0  # original untouched
+
+
+class _FakeMgr:
+    def __init__(self, restored):
+        self.restored = restored
+        self.calls = 0
+
+    def rollback(self, like, shardings=None):
+        self.calls += 1
+        return self.restored
+
+
+def test_runner_streak_and_rollback():
+    scfg = S.SentinelConfig(k_consecutive=3, max_retries=2, lr_backoff=0.5)
+    ckpt_state = {"sent": _warm(lr_scale=1.0)}
+    mgr = _FakeMgr((dict(ckpt_state), 40))
+    runner = S.SentinelRunner(scfg, mgr, like=None)
+    assert not runner.observe(S.NONFINITE_LOSS)
+    assert not runner.observe(S.NONFINITE_LOSS)
+    assert not runner.observe(0)          # healthy step resets the streak
+    assert not runner.observe(S.NONFINITE_LOSS)
+    assert not runner.observe(S.NONFINITE_LOSS)
+    assert runner.observe(S.NONFINITE_LOSS)   # 3rd consecutive -> roll back
+    live = {"sent": _warm(lr_scale=1.0)}
+    state, resume = runner.rollback(live)
+    assert resume == 41 and mgr.calls == 1
+    assert float(state["sent"].lr_scale) == 0.5   # backoff applied
+    assert runner.rollbacks == 1 and runner.fatal_streak == 0
+
+
+def test_runner_keeps_current_backoff_across_rollbacks():
+    scfg = S.SentinelConfig(k_consecutive=1, max_retries=5, lr_backoff=0.5)
+    mgr = _FakeMgr(({"sent": _warm(lr_scale=1.0)}, 10))
+    runner = S.SentinelRunner(scfg, mgr, like=None)
+    live = {"sent": _warm(lr_scale=0.5)}  # one backoff already applied
+    mgr.restored = ({"sent": _warm(lr_scale=1.0)}, 10)
+    state, _ = runner.rollback(live)
+    # checkpointed lr_scale (1.0) is overridden by live history (0.5) * 0.5
+    assert float(state["sent"].lr_scale) == 0.25
+
+
+def test_runner_retries_exhausted():
+    scfg = S.SentinelConfig(k_consecutive=1, max_retries=1)
+    mgr = _FakeMgr(({"sent": _warm()}, 5))
+    runner = S.SentinelRunner(scfg, mgr, like=None)
+    runner.rollback({"sent": _warm()})
+    with pytest.raises(S.SentinelAbort):
+        runner.rollback({"sent": _warm()})
+
+
+def test_runner_no_checkpoint_aborts():
+    runner = S.SentinelRunner(S.SentinelConfig(), _FakeMgr(None), like=None)
+    with pytest.raises(S.SentinelAbort):
+        runner.rollback({"sent": _warm()})
