@@ -5,13 +5,19 @@ deliverable here is the HBM-traffic model: the unfused composition's bytes
 come from the loop-aware HLO analysis (hlo_cost.analyze), the fused kernels'
 bytes from the compiled program's ENTRY boundary (hlo_cost.entry_boundary_
 bytes — inputs once + outputs once, the exact HBM traffic of a single-pass
-kernel). Covers the QAT forward, the custom_vjp backward (both Pallas
-backward kernels), and the serving int8/packed-int4 matmuls.
+kernel). Covers the QAT forward, the custom_vjp backward (the COMBINED
+dX/dW kernel the vjp ships, modeled against the legacy split pair it
+replaced), and the serving int8/packed-int4 matmuls.
 
-`main()` emits BENCH_kernels.json next to the cwd for CI/report tooling.
+`main()` emits BENCH_kernels.json next to the cwd for CI/report tooling and
+exits nonzero if the fused custom_vjp drifts from the unfused composition
+past tolerance (forward 1e-5, gradients 1e-4) — `--smoke` runs only that
+equivalence gate plus the traffic model (no timing loops) so tier-1 CI can
+afford it.
 """
 from __future__ import annotations
 
+import argparse
 import json
 import time
 
@@ -104,13 +110,20 @@ def run():
     wcols = ws.reshape(1, -1)
     kw = dict(q_n_a=aspec.q_n, q_p_a=aspec.q_p, q_n_w=wspec.q_n,
               q_p_w=wspec.q_p, interpret=True)
-    bwd_fused_bytes = (
+    # legacy split pair: dX and dW each re-stage dY/X/W from HBM ...
+    bwd_split_bytes = (
         _boundary_bytes(lambda dy, x, w, a_s, a_b, ws:
                         qmm.quant_matmul_dx(dy, x, w, a_s, a_b, ws, **kw),
                         dy, x, w, a_s, a_b, wcols)
         + _boundary_bytes(lambda dy, x, w, a_s, a_b, ws:
                           qmm.quant_matmul_dw(dy, x, w, a_s, a_b, ws, **kw),
                           dy, x, w, a_s, a_b, wcols))
+    # ... vs the combined kernel the custom_vjp ships: one pallas_call, one
+    # HBM read per operand, all five cotangents out of shared staging.
+    bwd_combined_bytes = _boundary_bytes(
+        lambda dy, x, w, a_s, a_b, ws:
+        qmm.quant_matmul_bwd(dy, x, w, a_s, a_b, ws, **kw),
+        dy, x, w, a_s, a_b, wcols)
     t_bwd_unfused = _time(unfused_grad, x, w, a_s, a_b, ws)
     t_bwd_fused = _time(fused_grad, x, w, a_s, a_b, ws)
 
@@ -153,8 +166,10 @@ def run():
         },
         "qat_bwd": {
             "unfused_hbm_bytes": bwd_unfused_bytes,
-            "fused_hbm_bytes": bwd_fused_bytes,
-            "reduction": bwd_unfused_bytes / bwd_fused_bytes,
+            "split_hbm_bytes": bwd_split_bytes,
+            "fused_hbm_bytes": bwd_combined_bytes,
+            "reduction": bwd_unfused_bytes / bwd_combined_bytes,
+            "split_vs_combined": bwd_split_bytes / bwd_combined_bytes,
             "unfused_us": t_bwd_unfused,
             "fused_interpret_us": t_bwd_fused,
         },
@@ -179,21 +194,130 @@ def run():
     }
 
 
-def main():
-    r = run()
-    for sect in ("qat_fwd", "qat_bwd", "serving_int4"):
-        print(f"[{sect}]")
-        for k, v in r[sect].items():
-            print(f"  {k:32s} {v:,.1f}")
-    print(f"# fused QAT fwd moves {r['qat_fwd']['reduction']:.1f}x fewer HBM "
-          f"bytes, bwd {r['qat_bwd']['reduction']:.1f}x; packed int4 halves "
-          f"serving weight reads "
-          f"({r['serving_int4']['weight_traffic_reduction']:.1f}x) "
-          f"(structural, CPU-measured)")
-    with open("BENCH_kernels.json", "w") as f:
-        json.dump(r, f, indent=2, sort_keys=True)
-    return r
+TOL_FWD, TOL_GRAD = 1e-5, 1e-4
+
+# Equivalence-gate cases: one per fused dispatch flavor (N-side columns,
+# K-side per-head rows, batched per-expert). Small shapes — the gate checks
+# math, the traffic model above checks bytes.
+_PARITY_CASES = {
+    "ffn_cols": ("w_in", (40, 24), "bsd,df->bsf", (2, 5, 40), ()),
+    "wo_kside": ("wo", (4, 10, 24), "bshk,hkd->bsd", (2, 5, 4, 10), (0,)),
+    "moe_expert": ("moe_in", (3, 16, 20), "gecd,edf->gecf", (2, 3, 4, 16),
+                   (0,)),
+}
+
+
+def _norm_err(a, b):
+    a = np.asarray(a, np.float64)
+    b = np.asarray(b, np.float64)
+    return float(np.max(np.abs(a - b)) / max(np.max(np.abs(a)), 1.0))
+
+
+def _parity_case(name, shape, eq, xshape, group_axes):
+    from repro.core.policy import QuantConfig
+    from repro.models import common as C
+    q_off = QuantConfig(w_bits=4, a_bits=4, mode="mdq", fused_matmul="off")
+    q_on = q_off.replace(fused_matmul="on")
+    rng = np.random.default_rng(1)
+    p = C.linear_init(jax.random.PRNGKey(0), name, q_off, shape, std=0.1,
+                      group_axes=group_axes)
+    p["a_scale"] = jnp.asarray(0.3)
+    p["a_offset"] = jnp.asarray(0.02)
+    x = jnp.asarray(rng.standard_normal(xshape), jnp.bfloat16)
+
+    def loss(p, x, qcfg):
+        y = C.qlinear(p, x, name, qcfg, eq)
+        wgt = jnp.cos(jnp.arange(y.size, dtype=jnp.float32) * 0.1)
+        return jnp.sum(y.astype(jnp.float32).reshape(-1) * wgt)
+
+    y_off = C.qlinear(p, x, name, q_off, eq).astype(jnp.float32)
+    y_on = C.qlinear(p, x, name, q_on, eq).astype(jnp.float32)
+    errs = {"fwd": float(np.max(np.abs(np.asarray(y_off) - np.asarray(y_on))))}
+    g_off, gx_off = jax.grad(loss, argnums=(0, 1))(p, x, q_off)
+    g_on, gx_on = jax.grad(loss, argnums=(0, 1))(p, x, q_on)
+    errs["dx"] = _norm_err(gx_off.astype(jnp.float32),
+                           gx_on.astype(jnp.float32))
+    for k in g_off:
+        errs[f"d{k}"] = _norm_err(g_off[k], g_on[k])
+    return errs
+
+
+def check_equivalence():
+    """Fused-vs-unfused drift gate over every dispatch flavor.
+
+    Returns ({case.grad: err}, ok) — ok is False past TOL_FWD/TOL_GRAD, and
+    main() turns that into a nonzero exit so CI fails loudly.
+    """
+    errs, ok = {}, True
+    for label, case in _PARITY_CASES.items():
+        for k, v in _parity_case(*case).items():
+            errs[f"{label}.{k}"] = v
+            ok = ok and v <= (TOL_FWD if k == "fwd" else TOL_GRAD)
+    return errs, ok
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="equivalence gate + backward traffic model only "
+                         "(no timing loops, no BENCH_kernels.json)")
+    args = ap.parse_args(argv)
+
+    errs, ok = check_equivalence()
+    print("[equivalence]")
+    for k, v in sorted(errs.items()):
+        print(f"  {k:32s} {v:.2e}")
+
+    if args.smoke:
+        dy = jnp.ones((M, N), jnp.float32)
+        x = jnp.ones((M, K), jnp.float32)
+        w = jnp.ones((K, N), jnp.float32)
+        sc = jnp.ones((), jnp.float32)
+        wcols = jnp.ones((1, N), jnp.float32)
+        wspec = QuantSpec(bits=4)
+        aspec = QuantSpec(bits=4, signed=False, offset=True)
+        kw = dict(q_n_a=aspec.q_n, q_p_a=aspec.q_p, q_n_w=wspec.q_n,
+                  q_p_w=wspec.q_p, interpret=True)
+        split = (
+            _boundary_bytes(lambda dy, x, w, a_s, a_b, ws:
+                            qmm.quant_matmul_dx(dy, x, w, a_s, a_b, ws, **kw),
+                            dy, x, w, sc, sc, wcols)
+            + _boundary_bytes(lambda dy, x, w, a_s, a_b, ws:
+                              qmm.quant_matmul_dw(dy, x, w, a_s, a_b, ws,
+                                                  **kw),
+                              dy, x, w, sc, sc, wcols))
+        combined = _boundary_bytes(
+            lambda dy, x, w, a_s, a_b, ws:
+            qmm.quant_matmul_bwd(dy, x, w, a_s, a_b, ws, **kw),
+            dy, x, w, sc, sc, wcols)
+        print(f"[qat_bwd] split_hbm_bytes={split:,} "
+              f"combined_hbm_bytes={combined:,} "
+              f"({split / combined:.2f}x less backward traffic)")
+        if combined >= split:
+            print("FAIL: combined backward models MORE traffic than split")
+            return 1
+    else:
+        r = run()
+        r["equivalence"] = errs
+        for sect in ("qat_fwd", "qat_bwd", "serving_int4"):
+            print(f"[{sect}]")
+            for k, v in r[sect].items():
+                print(f"  {k:32s} {v:,.1f}")
+        print(f"# fused QAT fwd moves {r['qat_fwd']['reduction']:.1f}x fewer "
+              f"HBM bytes, bwd {r['qat_bwd']['reduction']:.1f}x (combined "
+              f"dX/dW kernel {r['qat_bwd']['split_vs_combined']:.2f}x less "
+              f"than the split pair); packed int4 halves serving weight "
+              f"reads ({r['serving_int4']['weight_traffic_reduction']:.1f}x) "
+              f"(structural, CPU-measured)")
+        with open("BENCH_kernels.json", "w") as f:
+            json.dump(r, f, indent=2, sort_keys=True)
+
+    if not ok:
+        print("FAIL: fused-vs-unfused equivalence drift past tolerance "
+              f"(fwd {TOL_FWD:g}, grads {TOL_GRAD:g})")
+        return 1
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    raise SystemExit(main())

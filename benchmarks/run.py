@@ -55,7 +55,9 @@ def main() -> None:
     rows.append((name, us, f"area_advantage={worst / ours:.2f}x"))
 
     print("=" * 72, "\n[kernels] Pallas vs unfused")
-    name, us, r = _timed("kernel_bench", kernel_bench.main)
+    # run() returns the measurement dict; the CLI main() wraps it with the
+    # fused-vs-unfused equivalence gate and exit-code logic.
+    name, us, r = _timed("kernel_bench", kernel_bench.run)
     rows.append((name, us, f"hbm_reduction={r['hbm_traffic_reduction']:.1f}x"))
 
     print("=" * 72, "\n[roofline] dry-run sweep table")

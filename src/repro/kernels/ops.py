@@ -5,11 +5,15 @@ QuantSpec plumbing, and the interpret flag (True on CPU; False on real TPU —
 `on_tpu()` picks automatically).
 
 `fused_qat_matmul` is the differentiable entry point: a jax.custom_vjp whose
-forward AND backward are single Pallas kernels (one HBM round trip each),
-with the LSQ/LSQ+ gradients (Eq. 6-7) recomputed tile-wise in VMEM. The
-module-wise gradient scale g and per-group scale reductions are applied
+forward AND backward are single Pallas kernels (one HBM round trip each —
+the backward is ONE combined dX/dW kernel sharing a single staging of
+dY/X/W), with the LSQ/LSQ+ gradients (Eq. 6-7) recomputed tile-wise in
+VMEM. Weight scales ride as an N-side (N,) column vector or a K-side (K,)
+row vector (`w_scale_axis`, per-head wo/xo); `fused_qat_matmul_batched`
+covers the MoE (E, M, K) @ (E, K, N) expert matmul with per-expert scales.
+The module-wise gradient scale g and per-group scale reductions are applied
 OUTSIDE the vjp boundary (via core.quantizer.grad_scale and a differentiable
-broadcast of the scale to per-column form), exactly mirroring
+broadcast of the scale to vector form), exactly mirroring
 core.quantizer.fake_quant's composition.
 """
 from __future__ import annotations
@@ -125,15 +129,23 @@ def int_matmul(x, w_codes, w_scale, w_spec: QuantSpec, *, packed: bool = False,
 # Fused QAT matmul with custom_vjp (the training hot path)
 # ---------------------------------------------------------------------------
 
-def _qmm2d_forward(static, x2, w2, a_scale, a_offset, ws_cols):
-    q_n_a, q_p_a, q_n_w, q_p_w, interpret, out_dtype, _round_cot = static
+def _pad_w_scale(ws_vec, k_side: bool, k, n, kp, np_):
+    """(N,) -> padded (1, Np) column scale, or (K,) -> padded (Kp, 1) rows."""
+    if k_side:
+        ws = jnp.reshape(ws_vec, (k, 1)).astype(jnp.float32)
+        return jnp.pad(ws, ((0, kp - k), (0, 0)), constant_values=1.0)
+    ws = jnp.reshape(ws_vec, (1, n)).astype(jnp.float32)
+    return jnp.pad(ws, ((0, 0), (0, np_ - n)), constant_values=1.0)
+
+
+def _qmm2d_forward(static, x2, w2, a_scale, a_offset, ws_vec):
+    q_n_a, q_p_a, q_n_w, q_p_w, interpret, out_dtype, _round_cot, k_side = static
     m, k = x2.shape
     n = w2.shape[1]
     bm, bn, bk = _qmm.DEFAULT_TILES
     x2p, _, _ = _pad2d(x2, bm, bk)
     wp, _, _ = _pad2d(w2, bk, bn)
-    ws = jnp.reshape(ws_cols, (1, n)).astype(jnp.float32)
-    wsp = jnp.pad(ws, ((0, 0), (0, wp.shape[1] - n)), constant_values=1.0)
+    wsp = _pad_w_scale(ws_vec, k_side, k, n, wp.shape[0], wp.shape[1])
     out = _qmm.quant_matmul(x2p, wp, a_scale, a_offset, wsp,
                             q_n_a=q_n_a, q_p_a=q_p_a, q_n_w=q_n_w, q_p_w=q_p_w,
                             interpret=interpret, out_dtype=out_dtype)
@@ -141,18 +153,18 @@ def _qmm2d_forward(static, x2, w2, a_scale, a_offset, ws_cols):
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
-def _fused_qmm2d(static, x2, w2, a_scale, a_offset, ws_cols):
-    return _qmm2d_forward(static, x2, w2, a_scale, a_offset, ws_cols)
+def _fused_qmm2d(static, x2, w2, a_scale, a_offset, ws_vec):
+    return _qmm2d_forward(static, x2, w2, a_scale, a_offset, ws_vec)
 
 
-def _fused_qmm2d_fwd(static, x2, w2, a_scale, a_offset, ws_cols):
-    y = _qmm2d_forward(static, x2, w2, a_scale, a_offset, ws_cols)
-    return y, (x2, w2, a_scale, a_offset, ws_cols)
+def _fused_qmm2d_fwd(static, x2, w2, a_scale, a_offset, ws_vec):
+    y = _qmm2d_forward(static, x2, w2, a_scale, a_offset, ws_vec)
+    return y, (x2, w2, a_scale, a_offset, ws_vec)
 
 
 def _fused_qmm2d_bwd(static, res, dy):
-    q_n_a, q_p_a, q_n_w, q_p_w, interpret, _out_dtype, round_cot = static
-    x2, w2, a_scale, a_offset, ws_cols = res
+    q_n_a, q_p_a, q_n_w, q_p_w, interpret, _out_dtype, round_cot, k_side = static
+    x2, w2, a_scale, a_offset, ws_vec = res
     m, k = x2.shape
     n = w2.shape[1]
     bm, bn, bk = _qmm.DEFAULT_TILES
@@ -160,42 +172,130 @@ def _fused_qmm2d_bwd(static, res, dy):
     dyp, _, _ = _pad2d(dy.astype(jnp.float32), bm, bn)
     xp, _, _ = _pad2d(x2, bm, bk)
     wp, _, _ = _pad2d(w2, bk, bn)
-    ws = jnp.reshape(ws_cols, (1, n)).astype(jnp.float32)
-    wsp = jnp.pad(ws, ((0, 0), (0, wp.shape[1] - n)), constant_values=1.0)
-    kw = dict(q_n_a=q_n_a, q_p_a=q_p_a, q_n_w=q_n_w, q_p_w=q_p_w,
-              round_cot=round_cot, interpret=interpret)
-    dx, dsa, dba = _qmm.quant_matmul_dx(dyp, xp, wp, a_scale, a_offset, wsp, **kw)
-    dw, dws = _qmm.quant_matmul_dw(dyp, xp, wp, a_scale, a_offset, wsp, **kw)
+    wsp = _pad_w_scale(ws_vec, k_side, k, n, wp.shape[0], wp.shape[1])
+    dx, dsa, dba, dw, dws = _qmm.quant_matmul_bwd(
+        dyp, xp, wp, a_scale, a_offset, wsp,
+        q_n_a=q_n_a, q_p_a=q_p_a, q_n_w=q_n_w, q_p_w=q_p_w,
+        round_cot=round_cot, interpret=interpret)
+    dws_vec = dws[:k, 0] if k_side else dws[0, :n]
     return (dx[:m, :k].astype(x2.dtype),
             dw[:k, :n].astype(w2.dtype),
             dsa.astype(jnp.result_type(a_scale)).reshape(jnp.shape(a_scale)),
             dba.astype(jnp.result_type(a_offset)).reshape(jnp.shape(a_offset)),
-            dws[0, :n].astype(jnp.result_type(ws_cols)))
+            dws_vec.astype(jnp.result_type(ws_vec)))
 
 
 _fused_qmm2d.defvjp(_fused_qmm2d_fwd, _fused_qmm2d_bwd)
 
 
-def fused_qat_matmul(x, w2, a_scale, a_offset, ws_cols,
+def fused_qat_matmul(x, w2, a_scale, a_offset, ws_vec,
                      a_spec: QuantSpec, w_spec: QuantSpec, *,
                      interpret=None, out_dtype=jnp.float32,
-                     cotangent_rounding: bool = True):
+                     cotangent_rounding: bool = True,
+                     w_scale_axis: str = "n"):
     """Differentiable fused q(x) @ q(w) — forward and backward each one
     Pallas kernel (single HBM round trip), LSQ/LSQ+ gradients for all five
     inputs.
 
     x: (..., K); w2: (K, N); a_scale/a_offset: 0-d (pre-grad_scale'd by the
-    caller); ws_cols: (N,) per-column scale (pre-grad_scale'd and expanded
+    caller); ws_vec: the weight scale expanded per column (N,) when
+    w_scale_axis="n", or per contracted row (K,) when w_scale_axis="k"
+    (K-side per-head scales). Either way it is pre-grad_scale'd and expanded
     from its group shape by a differentiable broadcast, so group-sum and g
-    factors ride on autodiff outside this boundary).
+    factors ride on autodiff outside this boundary.
     """
+    assert w_scale_axis in ("n", "k"), w_scale_axis
     interpret = (not on_tpu()) if interpret is None else interpret
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])
     static = (a_spec.q_n, a_spec.q_p, w_spec.q_n, w_spec.q_p,
-              bool(interpret), out_dtype, bool(cotangent_rounding))
-    y2 = _fused_qmm2d(static, x2, w2, a_scale, a_offset, ws_cols)
+              bool(interpret), out_dtype, bool(cotangent_rounding),
+              w_scale_axis == "k")
+    y2 = _fused_qmm2d(static, x2, w2, a_scale, a_offset, ws_vec)
     return y2.reshape(*lead, w2.shape[-1])
+
+
+# ---------------------------------------------------------------------------
+# Batched-expert fused QAT matmul (MoE expert einsums)
+# ---------------------------------------------------------------------------
+
+def _pad3d(x, b1, b2):
+    _, m, n = x.shape
+    pm = (-m) % b1
+    pn = (-n) % b2
+    if pm or pn:
+        x = jnp.pad(x, ((0, 0), (0, pm), (0, pn)))
+    return x
+
+
+def _qmm3d_forward(static, x3, w3, a_scale, a_offset, ws_en):
+    q_n_a, q_p_a, q_n_w, q_p_w, interpret, out_dtype, _round_cot = static
+    e, m, k = x3.shape
+    n = w3.shape[-1]
+    bm, bn, bk = _qmm.DEFAULT_TILES
+    xp = _pad3d(x3, bm, bk)
+    wp = _pad3d(w3, bk, bn)
+    wsp = jnp.pad(ws_en.astype(jnp.float32),
+                  ((0, 0), (0, wp.shape[-1] - n)), constant_values=1.0)
+    out = _qmm.quant_matmul_batched(
+        xp, wp, a_scale.reshape(e, 1), a_offset.reshape(e, 1), wsp,
+        q_n_a=q_n_a, q_p_a=q_p_a, q_n_w=q_n_w, q_p_w=q_p_w,
+        interpret=interpret, out_dtype=out_dtype)
+    return out[:, :m, :n]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _fused_qmm3d(static, x3, w3, a_scale, a_offset, ws_en):
+    return _qmm3d_forward(static, x3, w3, a_scale, a_offset, ws_en)
+
+
+def _fused_qmm3d_fwd(static, x3, w3, a_scale, a_offset, ws_en):
+    y = _qmm3d_forward(static, x3, w3, a_scale, a_offset, ws_en)
+    return y, (x3, w3, a_scale, a_offset, ws_en)
+
+
+def _fused_qmm3d_bwd(static, res, dy):
+    q_n_a, q_p_a, q_n_w, q_p_w, interpret, _out_dtype, round_cot = static
+    x3, w3, a_scale, a_offset, ws_en = res
+    e, m, k = x3.shape
+    n = w3.shape[-1]
+    bm, bn, bk = _qmm.DEFAULT_TILES
+    dyp = _pad3d(dy.astype(jnp.float32), bm, bn)
+    xp = _pad3d(x3, bm, bk)
+    wp = _pad3d(w3, bk, bn)
+    wsp = jnp.pad(ws_en.astype(jnp.float32),
+                  ((0, 0), (0, wp.shape[-1] - n)), constant_values=1.0)
+    dx, dsa, dba, dw, dws = _qmm.quant_matmul_bwd_batched(
+        dyp, xp, wp, a_scale.reshape(e, 1), a_offset.reshape(e, 1), wsp,
+        q_n_a=q_n_a, q_p_a=q_p_a, q_n_w=q_n_w, q_p_w=q_p_w,
+        round_cot=round_cot, interpret=interpret)
+    return (dx[:, :m, :k].astype(x3.dtype),
+            dw[:, :k, :n].astype(w3.dtype),
+            dsa.astype(jnp.result_type(a_scale)).reshape(jnp.shape(a_scale)),
+            dba.astype(jnp.result_type(a_offset)).reshape(jnp.shape(a_offset)),
+            dws[:, :n].astype(jnp.result_type(ws_en)))
+
+
+_fused_qmm3d.defvjp(_fused_qmm3d_fwd, _fused_qmm3d_bwd)
+
+
+def fused_qat_matmul_batched(x3, w3, a_scale, a_offset, ws_en,
+                             a_spec: QuantSpec, w_spec: QuantSpec, *,
+                             interpret=None, out_dtype=jnp.float32,
+                             cotangent_rounding: bool = True):
+    """Per-expert differentiable fused matmul: y[e] = q_a(x[e]) @ q_w(w[e]).
+
+    x3: (E, M, K); w3: (E, K, N); a_scale/a_offset: (E,) per-expert scalars
+    (broadcast from the shared module scalar by the caller, so the cotangent
+    sums back through autodiff); ws_en: (E, N) per-expert column scales
+    (pre-grad_scale'd, expanded from the (E, 1, 1) group shape by a
+    differentiable broadcast). Forward and backward are each ONE Pallas
+    kernel whose grid leads with the expert axis.
+    """
+    interpret = (not on_tpu()) if interpret is None else interpret
+    static = (a_spec.q_n, a_spec.q_p, w_spec.q_n, w_spec.q_p,
+              bool(interpret), out_dtype, bool(cotangent_rounding))
+    return _fused_qmm3d(static, x3, w3, a_scale, a_offset, ws_en)
 
 
 def bin_stats(w, scale, spec: QuantSpec, *, interpret=None):

@@ -3,9 +3,10 @@
 Computes  out = q_a(X) @ q_w(W)  in one pass:
   * X (M, K) is quantized with a learnable per-tensor (scale, offset)
     (LSQ+ activation quantizer),
-  * W (K, N) with per-COLUMN-GROUP scales (1, N) — per-head / per-expert
-    scales repeat along N, per-tensor scales broadcast — the paper's
-    module-dependent granularity,
+  * W (K, N) with grouped scales on EITHER side of the 2D reshape — (1, N)
+    column scales (per-head qkv, per-channel) or (K, 1) row scales (per-head
+    wo/xo whose head axis is contracted) — per-tensor scales broadcast; this
+    is the paper's full module-dependent granularity (Sec. 4.3),
   * tiles are (bm, bk) x (bk, bn) with bk the MXU contraction tile; the
     f32 accumulator lives in the output VMEM block across the K grid
     dimension (revisited output pattern).
@@ -16,6 +17,12 @@ per step versus the unfused composition.
 
 Grid iteration order is (M, N, K) with K innermost so the output block is
 revisited consecutively (legal accumulation pattern on TPU).
+
+Batched-expert variants (`quant_matmul_batched` / `quant_matmul_bwd_batched`)
+add a leading grid dimension over the expert axis: each expert's weight
+(E, K, N), per-expert activation scale/offset (E, 1) and per-expert column
+scales (E, N) are indexed by program_id(0), covering the MoE expert einsums
+gecd,edf->gecf / gecf,efd->gecd without leaving the fused path.
 """
 from __future__ import annotations
 
@@ -54,13 +61,22 @@ def _qmm_kernel(x_ref, w_ref, as_ref, ab_ref, ws_ref, o_ref, acc_ref, *,
         o_ref[...] = acc_ref[...].astype(o_ref.dtype)
 
 
+def _w_scale_spec(w_scale, bk, bn):
+    """BlockSpec for a (1, N) column-scale or (K, 1) row-scale operand."""
+    if w_scale.shape[0] == 1:   # column groups (broadcast over K rows)
+        return pl.BlockSpec((1, bn), lambda i, j, kk: (0, j))
+    assert w_scale.shape[1] == 1, w_scale.shape
+    return pl.BlockSpec((bk, 1), lambda i, j, kk: (kk, 0))
+
+
 @functools.partial(jax.jit, static_argnames=("q_n_a", "q_p_a", "q_n_w", "q_p_w",
                                              "tiles", "interpret", "out_dtype"))
-def quant_matmul(x, w, a_scale, a_offset, w_col_scale, *,
+def quant_matmul(x, w, a_scale, a_offset, w_scale, *,
                  q_n_a: int, q_p_a: int, q_n_w: int, q_p_w: int,
                  tiles=DEFAULT_TILES, interpret: bool = True,
                  out_dtype=jnp.float32):
-    """x: (M, K); w: (K, N); a_scale/a_offset: scalars; w_col_scale: (1, N)."""
+    """x: (M, K); w: (K, N); a_scale/a_offset: scalars; w_scale: (1, N)
+    column groups or (K, 1) row groups (K-side per-head scales)."""
     m, k = x.shape
     k2, n = w.shape
     assert k == k2, (x.shape, w.shape)
@@ -79,13 +95,76 @@ def quant_matmul(x, w, a_scale, a_offset, w_col_scale, *,
             pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
             pl.BlockSpec((1, 1), lambda i, j, kk: (0, 0)),
             pl.BlockSpec((1, 1), lambda i, j, kk: (0, 0)),
-            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+            _w_scale_spec(w_scale, bk, bn),
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         interpret=interpret,
-    )(x, w, a_s, a_b, w_col_scale.astype(jnp.float32))
+    )(x, w, a_s, a_b, w_scale.astype(jnp.float32))
+
+
+def _qmm_batched_kernel(x_ref, w_ref, as_ref, ab_ref, ws_ref, o_ref, acc_ref,
+                        *, q_n_a, q_p_a, q_n_w, q_p_w, n_k):
+    @pl.when(pl.program_id(3) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[0].astype(jnp.float32)
+    a_s = jnp.maximum(as_ref[0, 0], 1e-9)
+    a_b = ab_ref[0, 0]
+    xq = jnp.clip(jnp.round((x - a_b) / a_s), -float(q_n_a), float(q_p_a))
+    xd = xq * a_s + a_b
+
+    w = w_ref[0].astype(jnp.float32)
+    w_s = jnp.maximum(ws_ref[...].astype(jnp.float32), 1e-9)  # (1, bn)
+    wq = jnp.clip(jnp.round(w / w_s), -float(q_n_w), float(q_p_w))
+    wd = wq * w_s
+
+    acc_ref[...] += jnp.dot(xd.astype(jnp.bfloat16), wd.astype(jnp.bfloat16),
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(3) == n_k - 1)
+    def _done():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("q_n_a", "q_p_a", "q_n_w", "q_p_w",
+                                             "tiles", "interpret", "out_dtype"))
+def quant_matmul_batched(x, w, a_scale, a_offset, w_scale, *,
+                         q_n_a: int, q_p_a: int, q_n_w: int, q_p_w: int,
+                         tiles=DEFAULT_TILES, interpret: bool = True,
+                         out_dtype=jnp.float32):
+    """Batched-expert fused matmul: out[e] = q_a(x[e]) @ q_w(w[e]).
+
+    x: (E, M, K); w: (E, K, N); a_scale/a_offset: (E, 1) per-expert scalars;
+    w_scale: (E, N) per-expert column scales. The grid's leading dimension
+    runs over experts; every per-expert operand is indexed by program_id(0).
+    """
+    e, m, k = x.shape
+    e2, k2, n = w.shape
+    assert (e, k) == (e2, k2), (x.shape, w.shape)
+    bm = min(tiles[0], m)
+    bn = min(tiles[1], n)
+    bk = min(tiles[2], k)
+    grid = (e, pl.cdiv(m, bm), pl.cdiv(n, bn), pl.cdiv(k, bk))
+    return pl.pallas_call(
+        functools.partial(_qmm_batched_kernel, q_n_a=q_n_a, q_p_a=q_p_a,
+                          q_n_w=q_n_w, q_p_w=q_p_w, n_k=grid[3]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bm, bk), lambda ee, i, j, kk: (ee, i, kk)),
+            pl.BlockSpec((1, bk, bn), lambda ee, i, j, kk: (ee, kk, j)),
+            pl.BlockSpec((1, 1), lambda ee, i, j, kk: (ee, 0)),
+            pl.BlockSpec((1, 1), lambda ee, i, j, kk: (ee, 0)),
+            pl.BlockSpec((1, bn), lambda ee, i, j, kk: (ee, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, bn), lambda ee, i, j, kk: (ee, i, j)),
+        out_shape=jax.ShapeDtypeStruct((e, m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, w, a_scale.astype(jnp.float32), a_offset.astype(jnp.float32),
+      w_scale.astype(jnp.float32))
 
 
 # ---------------------------------------------------------------------------
@@ -286,6 +365,318 @@ def quant_matmul_dw(dy, x, w, a_scale, a_offset, w_col_scale, *,
         interpret=interpret,
     )(x, dy, a_s, a_b, w, w_col_scale.astype(jnp.float32))
     return dw, dws
+
+
+# ---------------------------------------------------------------------------
+# Combined backward: dX, dW and all three scale reductions in ONE pallas_call
+# ---------------------------------------------------------------------------
+#
+# The split quant_matmul_dx / quant_matmul_dw kernels each stage dY, X and W
+# from HBM (dx reads dY+W per tile and X at finalization; dw reads X+dY per
+# tile and W at finalization), so the backward pays two HBM round trips per
+# operand. This kernel shares one staging of all three: grid (K, M, N) with
+# N innermost; per step it dequantizes the X and W tiles once and feeds both
+# accumulations —
+#
+#   dX(i,kk) += dY(i,j) @ Wd(kk,j)^T   accumulated over j in a (bm, bk)
+#               scratch, finalized (Eq. 6 mask + Eq. 7 scale/offset sums)
+#               at the last j;
+#   dW(kk,j) += Xd(i,kk)^T @ dY(i,j)   accumulated over i in a (bk, Np)
+#               scratch row panel, finalized at the last i with the
+#               per-column (1, N) or per-row (K, 1) scale-gradient sums.
+#
+# The entry boundary therefore reads dY/X/W once and writes each output once
+# — ~1.5x less modeled backward traffic than the two split kernels (see
+# BENCH_kernels.json qat_bwd.combined_vs_split). The (bk, Np) panel bounds
+# N by VMEM; tiles stay the MXU defaults, matching the split kernels.
+
+
+def _qmm_bwd_kernel(dy_ref, x_ref, w_ref, as_ref, ab_ref, ws_ref,
+                    dx_ref, dsa_ref, dba_ref, dw_ref, dws_ref,
+                    dx_acc, dw_acc, *,
+                    q_n_a, q_p_a, q_n_w, q_p_w, n_i, n_j, round_cot, k_side):
+    kk, i, j = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+    bn = dy_ref.shape[-1]
+
+    @pl.when(jnp.logical_and(kk == 0, jnp.logical_and(i == 0, j == 0)))
+    def _init_scalars():
+        dsa_ref[...] = jnp.zeros_like(dsa_ref)
+        dba_ref[...] = jnp.zeros_like(dba_ref)
+
+    @pl.when(j == 0)
+    def _init_dx():
+        dx_acc[...] = jnp.zeros_like(dx_acc)
+
+    # dequantize both operand tiles ONCE from the VMEM-resident data
+    x = x_ref[...].astype(jnp.float32)
+    a_s = jnp.maximum(as_ref[0, 0], 1e-9)
+    a_b = ab_ref[0, 0]
+    u_x = (x - a_b) / a_s
+    xq = jnp.clip(jnp.round(u_x), -float(q_n_a), float(q_p_a))
+    xd = (xq * a_s + a_b).astype(jnp.bfloat16)
+
+    w = w_ref[...].astype(jnp.float32)
+    w_s = jnp.maximum(ws_ref[...].astype(jnp.float32), 1e-9)
+    u_w = w / w_s
+    qw = jnp.clip(jnp.round(u_w), -float(q_n_w), float(q_p_w))
+    wd = (qw * w_s).astype(jnp.bfloat16)
+
+    if round_cot:  # bf16-einsum caller: cotangent rounds like its autodiff
+        dy = dy_ref[...].astype(jnp.bfloat16)
+    else:          # f32-preferred einsum caller (lm_head): keep f32
+        dy = dy_ref[...].astype(jnp.float32)
+        wd = wd.astype(jnp.float32)
+        xd = xd.astype(jnp.float32)
+
+    dx_acc[...] += jax.lax.dot_general(
+        dy, wd, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+    part_dw = jax.lax.dot_general(
+        xd, dy, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    jsl = pl.dslice(j * bn, bn)
+
+    @pl.when(i == 0)
+    def _dw_first():
+        dw_acc[:, jsl] = part_dw
+
+    @pl.when(i > 0)
+    def _dw_rest():
+        dw_acc[:, jsl] += part_dw
+
+    @pl.when(j == n_j - 1)
+    def _fin_dx():
+        # cotangents take the primal's dtype: the unfused einsum's dX always
+        # rounds through bf16 at the astype boundary — match it
+        dxd = dx_acc[...].astype(jnp.bfloat16).astype(jnp.float32)
+        mf = jnp.logical_and(u_x >= -float(q_n_a),
+                             u_x <= float(q_p_a)).astype(jnp.float32)
+        dx_ref[...] = (dxd * mf).astype(dx_ref.dtype)
+        dsa_ref[0, 0] += jnp.sum(dxd * (xq - mf * u_x))
+        dba_ref[0, 0] += jnp.sum(dxd * (1.0 - mf))
+
+    @pl.when(i == n_i - 1)
+    def _fin_dw():
+        dwd = dw_acc[:, jsl].astype(jnp.bfloat16).astype(jnp.float32)
+        mfw = jnp.logical_and(u_w >= -float(q_n_w),
+                              u_w <= float(q_p_w)).astype(jnp.float32)
+        dw_ref[...] = (dwd * mfw).astype(dw_ref.dtype)
+        if k_side:
+            part = jnp.sum(dwd * (qw - mfw * u_w), axis=1, keepdims=True)
+
+            @pl.when(j == 0)
+            def _first():
+                dws_ref[...] = part
+
+            @pl.when(j > 0)
+            def _rest():
+                dws_ref[...] += part
+        else:
+            part = jnp.sum(dwd * (qw - mfw * u_w), axis=0, keepdims=True)
+
+            @pl.when(kk == 0)
+            def _first():
+                dws_ref[...] = part
+
+            @pl.when(kk > 0)
+            def _rest():
+                dws_ref[...] += part
+
+
+@functools.partial(jax.jit, static_argnames=("q_n_a", "q_p_a", "q_n_w", "q_p_w",
+                                             "round_cot", "tiles", "interpret"))
+def quant_matmul_bwd(dy, x, w, a_scale, a_offset, w_scale, *,
+                     q_n_a: int, q_p_a: int, q_n_w: int, q_p_w: int,
+                     round_cot: bool = True,
+                     tiles=DEFAULT_TILES, interpret: bool = True):
+    """Combined backward of quant_matmul — one pallas_call, one HBM read of
+    dY/X/W each: (dX, d a_scale_raw, d a_offset_raw, dW, d w_scale_raw).
+
+    dy: (M, N); x: (M, K); w: (K, N); w_scale: (1, N) column groups or
+    (K, 1) row groups. Scale cotangents are the RAW range-indicator sums —
+    the caller applies the module-wise gradient scale g and the per-group
+    reduction (via core.quantizer.grad_scale + a differentiable broadcast).
+    All dims must be padded to tile multiples by the caller.
+    """
+    m, k = x.shape
+    _, n = w.shape
+    bm = min(tiles[0], m)
+    bn = min(tiles[1], n)
+    bk = min(tiles[2], k)
+    grid = (pl.cdiv(k, bk), pl.cdiv(m, bm), pl.cdiv(n, bn))
+    n_pad = grid[2] * bn
+    k_side = w_scale.shape[0] != 1
+    a_s = jnp.reshape(jnp.asarray(a_scale, jnp.float32), (1, 1))
+    a_b = jnp.reshape(jnp.asarray(a_offset, jnp.float32), (1, 1))
+    if k_side:
+        ws_spec = pl.BlockSpec((bk, 1), lambda kk, i, j: (kk, 0))
+        dws_spec = pl.BlockSpec((bk, 1), lambda kk, i, j: (kk, 0))
+        dws_shape = (k, 1)
+    else:
+        ws_spec = pl.BlockSpec((1, bn), lambda kk, i, j: (0, j))
+        dws_spec = pl.BlockSpec((1, bn), lambda kk, i, j: (0, j))
+        dws_shape = (1, n)
+    dx, dsa, dba, dw, dws = pl.pallas_call(
+        functools.partial(_qmm_bwd_kernel, q_n_a=q_n_a, q_p_a=q_p_a,
+                          q_n_w=q_n_w, q_p_w=q_p_w, n_i=grid[1], n_j=grid[2],
+                          round_cot=round_cot, k_side=k_side),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda kk, i, j: (i, j)),
+            pl.BlockSpec((bm, bk), lambda kk, i, j: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda kk, i, j: (kk, j)),
+            pl.BlockSpec((1, 1), lambda kk, i, j: (0, 0)),
+            pl.BlockSpec((1, 1), lambda kk, i, j: (0, 0)),
+            ws_spec,
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, bk), lambda kk, i, j: (i, kk)),
+            pl.BlockSpec((1, 1), lambda kk, i, j: (0, 0)),
+            pl.BlockSpec((1, 1), lambda kk, i, j: (0, 0)),
+            pl.BlockSpec((bk, bn), lambda kk, i, j: (kk, j)),
+            dws_spec,
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, k), jnp.float32),
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+            jax.ShapeDtypeStruct((k, n), jnp.float32),
+            jax.ShapeDtypeStruct(dws_shape, jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((bm, bk), jnp.float32),
+                        pltpu.VMEM((bk, n_pad), jnp.float32)],
+        interpret=interpret,
+    )(dy, x, w, a_s, a_b, w_scale.astype(jnp.float32))
+    return dx, dsa.reshape(()), dba.reshape(()), dw, dws
+
+
+def _qmm_bwd_batched_kernel(dy_ref, x_ref, w_ref, as_ref, ab_ref, ws_ref,
+                            dx_ref, dsa_ref, dba_ref, dw_ref, dws_ref,
+                            dx_acc, dw_acc, *,
+                            q_n_a, q_p_a, q_n_w, q_p_w, n_i, n_j, round_cot):
+    kk, i, j = pl.program_id(1), pl.program_id(2), pl.program_id(3)
+    bn = dy_ref.shape[-1]
+
+    @pl.when(jnp.logical_and(kk == 0, jnp.logical_and(i == 0, j == 0)))
+    def _init_scalars():
+        dsa_ref[...] = jnp.zeros_like(dsa_ref)
+        dba_ref[...] = jnp.zeros_like(dba_ref)
+
+    @pl.when(j == 0)
+    def _init_dx():
+        dx_acc[...] = jnp.zeros_like(dx_acc)
+
+    x = x_ref[0].astype(jnp.float32)
+    a_s = jnp.maximum(as_ref[0, 0], 1e-9)
+    a_b = ab_ref[0, 0]
+    u_x = (x - a_b) / a_s
+    xq = jnp.clip(jnp.round(u_x), -float(q_n_a), float(q_p_a))
+    xd = (xq * a_s + a_b).astype(jnp.bfloat16)
+
+    w = w_ref[0].astype(jnp.float32)
+    w_s = jnp.maximum(ws_ref[...].astype(jnp.float32), 1e-9)  # (1, bn)
+    u_w = w / w_s
+    qw = jnp.clip(jnp.round(u_w), -float(q_n_w), float(q_p_w))
+    wd = (qw * w_s).astype(jnp.bfloat16)
+
+    if round_cot:
+        dy = dy_ref[0].astype(jnp.bfloat16)
+    else:
+        dy = dy_ref[0].astype(jnp.float32)
+        wd = wd.astype(jnp.float32)
+        xd = xd.astype(jnp.float32)
+
+    dx_acc[...] += jax.lax.dot_general(
+        dy, wd, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+    part_dw = jax.lax.dot_general(
+        xd, dy, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    jsl = pl.dslice(j * bn, bn)
+
+    @pl.when(i == 0)
+    def _dw_first():
+        dw_acc[:, jsl] = part_dw
+
+    @pl.when(i > 0)
+    def _dw_rest():
+        dw_acc[:, jsl] += part_dw
+
+    @pl.when(j == n_j - 1)
+    def _fin_dx():
+        dxd = dx_acc[...].astype(jnp.bfloat16).astype(jnp.float32)
+        mf = jnp.logical_and(u_x >= -float(q_n_a),
+                             u_x <= float(q_p_a)).astype(jnp.float32)
+        dx_ref[0] = (dxd * mf).astype(dx_ref.dtype)
+        dsa_ref[0, 0] += jnp.sum(dxd * (xq - mf * u_x))
+        dba_ref[0, 0] += jnp.sum(dxd * (1.0 - mf))
+
+    @pl.when(i == n_i - 1)
+    def _fin_dw():
+        dwd = dw_acc[:, jsl].astype(jnp.bfloat16).astype(jnp.float32)
+        mfw = jnp.logical_and(u_w >= -float(q_n_w),
+                              u_w <= float(q_p_w)).astype(jnp.float32)
+        dw_ref[0] = (dwd * mfw).astype(dw_ref.dtype)
+        part = jnp.sum(dwd * (qw - mfw * u_w), axis=0, keepdims=True)
+
+        @pl.when(kk == 0)
+        def _first():
+            dws_ref[...] = part
+
+        @pl.when(kk > 0)
+        def _rest():
+            dws_ref[...] += part
+
+
+@functools.partial(jax.jit, static_argnames=("q_n_a", "q_p_a", "q_n_w", "q_p_w",
+                                             "round_cot", "tiles", "interpret"))
+def quant_matmul_bwd_batched(dy, x, w, a_scale, a_offset, w_scale, *,
+                             q_n_a: int, q_p_a: int, q_n_w: int, q_p_w: int,
+                             round_cot: bool = True,
+                             tiles=DEFAULT_TILES, interpret: bool = True):
+    """Per-expert combined backward of quant_matmul_batched.
+
+    dy: (E, M, N); x: (E, M, K); w: (E, K, N); a_scale/a_offset: (E, 1);
+    w_scale: (E, N). Returns (dX (E,M,K), dsa (E,1), dba (E,1), dW (E,K,N),
+    dws (E,N)) with the scale cotangents raw (per-expert range-indicator
+    sums); the leading grid dimension runs over experts.
+    """
+    e, m, k = x.shape
+    _, _, n = w.shape
+    bm = min(tiles[0], m)
+    bn = min(tiles[1], n)
+    bk = min(tiles[2], k)
+    grid = (e, pl.cdiv(k, bk), pl.cdiv(m, bm), pl.cdiv(n, bn))
+    n_pad = grid[3] * bn
+    dx, dsa, dba, dw, dws = pl.pallas_call(
+        functools.partial(_qmm_bwd_batched_kernel, q_n_a=q_n_a, q_p_a=q_p_a,
+                          q_n_w=q_n_w, q_p_w=q_p_w, n_i=grid[2], n_j=grid[3],
+                          round_cot=round_cot),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bm, bn), lambda ee, kk, i, j: (ee, i, j)),
+            pl.BlockSpec((1, bm, bk), lambda ee, kk, i, j: (ee, i, kk)),
+            pl.BlockSpec((1, bk, bn), lambda ee, kk, i, j: (ee, kk, j)),
+            pl.BlockSpec((1, 1), lambda ee, kk, i, j: (ee, 0)),
+            pl.BlockSpec((1, 1), lambda ee, kk, i, j: (ee, 0)),
+            pl.BlockSpec((1, bn), lambda ee, kk, i, j: (ee, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bm, bk), lambda ee, kk, i, j: (ee, i, kk)),
+            pl.BlockSpec((1, 1), lambda ee, kk, i, j: (ee, 0)),
+            pl.BlockSpec((1, 1), lambda ee, kk, i, j: (ee, 0)),
+            pl.BlockSpec((1, bk, bn), lambda ee, kk, i, j: (ee, kk, j)),
+            pl.BlockSpec((1, bn), lambda ee, kk, i, j: (ee, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((e, m, k), jnp.float32),
+            jax.ShapeDtypeStruct((e, 1), jnp.float32),
+            jax.ShapeDtypeStruct((e, 1), jnp.float32),
+            jax.ShapeDtypeStruct((e, k, n), jnp.float32),
+            jax.ShapeDtypeStruct((e, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((bm, bk), jnp.float32),
+                        pltpu.VMEM((bk, n_pad), jnp.float32)],
+        interpret=interpret,
+    )(dy, x, w, a_scale.astype(jnp.float32), a_offset.astype(jnp.float32),
+      w_scale.astype(jnp.float32))
+    return dx, dsa, dba, dw, dws
 
 
 @functools.partial(jax.jit, static_argnames=("q_n_w", "q_p_w", "tiles",

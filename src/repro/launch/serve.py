@@ -24,6 +24,36 @@ from repro.models import model as M
 from repro.models.common import convert_to_serving
 
 
+def greedy_generate(decode, params, cache, prompts, new_tokens: int):
+    """Greedy batched decode: exactly `new_tokens` emitted tokens from
+    `prompt_len + new_tokens - 1` decode steps.
+
+    The first generated token is the argmax of the LAST prompt step's
+    logits, and the final decode's argmax is emitted rather than discarded
+    (the old loop ran one extra jit step per request whose result was
+    thrown away). Returns (tokens (batch, new_tokens), cache).
+    """
+    batch, prompt_len = prompts.shape
+    logits = None
+    for t in range(prompt_len):
+        logits, cache = decode(params, cache,
+                               {"tokens": prompts[:, t:t + 1],
+                                "pos": jnp.full((batch,), t, jnp.int32)})
+    if new_tokens <= 0:
+        return jnp.zeros((batch, 0), jnp.int32), cache
+    tok = jnp.argmax(logits[:, 0], -1)[:, None]
+    outs = []
+    for i in range(new_tokens):
+        outs.append(tok)
+        if i + 1 < new_tokens:
+            logits, cache = decode(
+                params, cache,
+                {"tokens": tok,
+                 "pos": jnp.full((batch,), prompt_len + i, jnp.int32)})
+            tok = jnp.argmax(logits[:, 0], -1)[:, None]
+    return jnp.concatenate(outs, 1), cache
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="granite-8b", choices=ARCH_IDS)
@@ -58,24 +88,14 @@ def main():
                            args.prompt_len)["tokens"]
 
     t0 = time.monotonic()
-    logits = None
-    for t in range(args.prompt_len):
-        logits, cache = decode(params, cache,
-                               {"tokens": prompts[:, t:t + 1],
-                                "pos": jnp.full((args.batch,), t, jnp.int32)})
-    tok = jnp.argmax(logits[:, 0], -1)[:, None]
-    outs = []
-    for t in range(args.prompt_len, total):
-        outs.append(tok)
-        logits, cache = decode(params, cache,
-                               {"tokens": tok,
-                                "pos": jnp.full((args.batch,), t, jnp.int32)})
-        tok = jnp.argmax(logits[:, 0], -1)[:, None]
-    jax.block_until_ready(tok)
+    out_toks, cache = greedy_generate(decode, params, cache, prompts,
+                                      args.new_tokens)
+    jax.block_until_ready(out_toks)
     dt = time.monotonic() - t0
+    steps = args.prompt_len + max(args.new_tokens - 1, 0)
     print(f"arch={cfg.name} mesh={dict(mesh.shape)} int{args.kv_bits}-KV "
-          f"batch={args.batch}: {args.batch * total / dt:.0f} tok/s")
-    print("sample:", jnp.concatenate(outs, 1)[0].tolist())
+          f"batch={args.batch}: {args.batch * steps / dt:.0f} tok/s")
+    print("sample:", out_toks[0].tolist())
 
 
 if __name__ == "__main__":

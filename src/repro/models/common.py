@@ -69,9 +69,12 @@ FUSED_EQS = {
     "bsd,dw->bsw": 1, "bsw,wv->bsv": 1, "bsw,wd->bsd": 1,
     # NOT "td,de->te": the MoE router is tiny and feeds top-k decisions;
     # keeping it on the f32 einsum preserves routing determinism.
-    # NOT "gecd,edf->gecf"/"gecf,efd->gecd": batched per-expert matmuls
-    # (ROADMAP open item).
 }
+
+# MoE batched expert einsums: the LEADING w axis is the expert batch dim
+# (grid axis of the batched kernel), then one contracted axis. Per-expert
+# scales ride as (E,)-indexed operands instead of folding into the 2D vector.
+FUSED_BATCHED_EQS = ("gecd,edf->gecf", "gecf,efd->gecd")
 
 # Int4 serving codes are nibble-packed along the matmul contraction axis,
 # counted from the END so the rule survives vmap-stacking (scan over layers).
@@ -91,16 +94,35 @@ def _use_fused(qcfg: QuantConfig) -> bool:
     return ops.on_tpu()
 
 
-def _cols_shape_ok(scale_shape, w_shape, n_k: int) -> bool:
-    """True when the scale's groups lie on the N side of the 2D reshape
-    (per-tensor, or broadcastable with 1s on all contracted axes)."""
+def _w_scale_side(scale_shape, w_shape, n_k: int):
+    """Classify which side of the 2D reshape a weight scale's groups lie on.
+
+    Returns "n" (per-tensor, or 1s on every contracted axis — per-head qkv,
+    per-channel), "k" (1s on every output axis, groups on contracted axes —
+    per-head wo/xo under MDQ), or None (groups straddle both sides: not
+    covered, fall back to the unfused composition).
+    """
     if len(scale_shape) == 0:
-        return True
+        return "n"
     if len(scale_shape) != len(w_shape):
-        return False
-    if any(s != 1 for s in scale_shape[:n_k]):
-        return False  # K-side groups (e.g. per-head wo): kernel can't yet
-    return all(s in (1, t) for s, t in zip(scale_shape[n_k:], w_shape[n_k:]))
+        return None
+    if any(s not in (1, t) for s, t in zip(scale_shape, w_shape)):
+        return None
+    if all(s == 1 for s in scale_shape[:n_k]):
+        return "n"
+    if all(s == 1 for s in scale_shape[n_k:]):
+        return "k"
+    return None
+
+
+def _cols_shape_ok(scale_shape, w_shape, n_k: int) -> bool:
+    """True when the scale's groups lie on the N side of the 2D reshape.
+
+    The serving int(4)_matmul only folds N-side column scales (K-side groups
+    would need per-K-tile rescaling of the int accumulator); the QAT path
+    additionally covers "k" via _w_scale_side.
+    """
+    return _w_scale_side(scale_shape, w_shape, n_k) == "n"
 
 
 def _scale_cols(scale, w_shape, n_k: int):
@@ -116,6 +138,16 @@ def _scale_cols(scale, w_shape, n_k: int):
     return jnp.broadcast_to(scale, tgt).reshape(-1)
 
 
+def _scale_rows(scale, w_shape, n_k: int):
+    """Differentiable (K,) per-row expansion of a K-side broadcastable scale.
+
+    Same autodiff trick as _scale_cols: the kernel's Eq. 6-7 scale-gradient
+    comes back per-row and the broadcast group-sums it to the stored
+    per-head shape (e.g. wo's (h, 1, 1))."""
+    tgt = tuple(w_shape[:n_k]) + (1,) * (len(w_shape) - n_k)
+    return jnp.broadcast_to(scale, tgt).reshape(-1)
+
+
 def _fused_eligible(qcfg, aspec, wspec, eq: str, p: dict, w) -> bool:
     if eq not in FUSED_EQS or not _use_fused(qcfg):
         return False
@@ -123,7 +155,25 @@ def _fused_eligible(qcfg, aspec, wspec, eq: str, p: dict, w) -> bool:
         return False
     if aspec.bits == 1 or wspec.bits == 1:
         return False  # binary sign_ste semantics differ from round/clip
-    return _cols_shape_ok(jnp.shape(p["w_scale"]), w.shape, FUSED_EQS[eq])
+    return _w_scale_side(jnp.shape(p["w_scale"]), w.shape,
+                         FUSED_EQS[eq]) is not None
+
+
+def _fused_eligible_batched(qcfg, aspec, wspec, eq: str, p: dict, w) -> bool:
+    """Eligibility for the batched per-expert kernel: w is (E, K, N) and the
+    scale is per-tensor or N-side per expert ((E,1,1) per-expert, (1,1,N),
+    (E,1,N)). K-side expert groups are not covered — fall back."""
+    if eq not in FUSED_BATCHED_EQS or not _use_fused(qcfg):
+        return False
+    if aspec is None or wspec is None or "a_scale" not in p:
+        return False
+    if aspec.bits == 1 or wspec.bits == 1:
+        return False
+    ss = jnp.shape(p["w_scale"])
+    if len(ss) == 0:
+        return True
+    return (len(ss) == 3 and ss[1] == 1
+            and all(s in (1, t) for s, t in zip(ss, w.shape)))
 
 
 def _fused_qat_linear(p: dict, x, aspec, wspec, n_k: int, *, out_dtype,
@@ -132,7 +182,9 @@ def _fused_qat_linear(p: dict, x, aspec, wspec, n_k: int, *, out_dtype,
 
     grad_scale (the module-wise g factor, Sec. 4.4.1) is applied here —
     outside the custom_vjp — exactly as core.quantizer.fake_quant does, so
-    the five gradients match the unfused composition's autodiff.
+    the five gradients match the unfused composition's autodiff. N-side
+    scales fold to a (N,) column vector, K-side per-head scales (wo/xo) to a
+    (K,) row vector dequantized per K-tile inside the kernel.
     """
     w = p["w"]
     k = 1
@@ -142,7 +194,11 @@ def _fused_qat_linear(p: dict, x, aspec, wspec, n_k: int, *, out_dtype,
     ref = jax.lax.stop_gradient(w)
     g_w = scale_grad_factor(wspec, ref, jnp.shape(p["w_scale"]))
     s_w = grad_scale(p["w_scale"], g_w)
-    cols = _scale_cols(s_w, w.shape, n_k)
+    side = _w_scale_side(jnp.shape(p["w_scale"]), w.shape, n_k)
+    if side == "k":
+        ws_vec = _scale_rows(s_w, w.shape, n_k)
+    else:
+        ws_vec = _scale_cols(s_w, w.shape, n_k)
     g_a = scale_grad_factor(aspec, ref, ())
     s_a = grad_scale(p["a_scale"], g_a)
     if "a_offset" in p:
@@ -151,10 +207,41 @@ def _fused_qat_linear(p: dict, x, aspec, wspec, n_k: int, *, out_dtype,
         b_a = jnp.zeros((), jnp.float32)
     lead = x.shape[:x.ndim - n_k]
     x2 = x.reshape(lead + (k,))
-    y = ops.fused_qat_matmul(x2, w.reshape(k, n), s_a, b_a, cols,
+    y = ops.fused_qat_matmul(x2, w.reshape(k, n), s_a, b_a, ws_vec,
                              aspec, wspec, out_dtype=out_dtype,
-                             cotangent_rounding=cotangent_rounding)
+                             cotangent_rounding=cotangent_rounding,
+                             w_scale_axis=side)
     return y.reshape(lead + tuple(w.shape[n_k:]))
+
+
+def _fused_qat_linear_batched(p: dict, x, aspec, wspec, *, out_dtype,
+                              cotangent_rounding: bool = True):
+    """Batched per-expert QAT matmul (MoE): x (g, E, c, K) @ w (E, K, N).
+
+    The expert axis becomes the leading kernel grid axis; per-expert weight
+    scales expand to (E, N) columns and the scalar activation quantizer
+    broadcasts to (E,) — both through plain jnp, so the cotangents group-sum
+    back to the stored shapes exactly like the 2D path.
+    """
+    w = p["w"]
+    e, k, n = w.shape
+    ref = jax.lax.stop_gradient(w)
+    g_w = scale_grad_factor(wspec, ref, jnp.shape(p["w_scale"]))
+    s_w = grad_scale(p["w_scale"], g_w)
+    s_w3 = jnp.reshape(s_w, (1, 1, 1)) if jnp.ndim(s_w) == 0 else s_w
+    ws_en = jnp.broadcast_to(s_w3, (e, 1, n)).reshape(e, n)
+    g_a = scale_grad_factor(aspec, ref, ())
+    s_a = jnp.broadcast_to(grad_scale(p["a_scale"], g_a), (e,))
+    if "a_offset" in p:
+        b_a = jnp.broadcast_to(grad_scale(p["a_offset"], g_a), (e,))
+    else:
+        b_a = jnp.zeros((e,), jnp.float32)
+    g, _, c, _ = x.shape
+    x3 = x.transpose(1, 0, 2, 3).reshape(e, g * c, k)
+    y = ops.fused_qat_matmul_batched(x3, w, s_a, b_a, ws_en, aspec, wspec,
+                                     out_dtype=out_dtype,
+                                     cotangent_rounding=cotangent_rounding)
+    return y.reshape(e, g, c, n).transpose(1, 0, 2, 3)
 
 
 def _serving_linear(p: dict, x, name: str, qcfg: QuantConfig, eq: str,
@@ -231,14 +318,15 @@ def qlinear(p: dict, x: jax.Array, name: str, qcfg: QuantConfig, eq: str,
     """Apply a quantized einsum-linear: fake-quant acts & weights, contract.
 
     Dispatch: every 2D-contraction einsum (FUSED_EQS — ffn, reshaped-head
-    qkv/o, lm head, recurrent projections) routes through the fused Pallas
-    quant-matmul
+    qkv/o with N-side OR K-side per-head scales, lm head, recurrent
+    projections) and the MoE batched expert einsums (FUSED_BATCHED_EQS,
+    per-expert scales) route through the fused Pallas quant-matmul
     (kernels/quant_matmul, custom_vjp for QAT; int(4)_matmul for serving)
     when `qcfg.fused_matmul` resolves on ("auto" = real TPU; "on" forces the
-    interpret-mode kernel so CPU tests exercise it). Shapes the kernel does
-    not cover yet — K-side per-head scales (wo/xo under MDQ), MoE's batched
-    expert einsum, binary (1-bit) quantizers — fall back to the pure-jnp
-    composition below.
+    interpret-mode kernel so CPU tests exercise it). After this coverage,
+    only binary (1-bit) quantizers and the deliberately-f32 MoE router fall
+    back to the pure-jnp composition below (plus degenerate scale shapes
+    that straddle both reshape sides, which no policy emits).
 
     Quantization math runs in f32 (bf16 was measured to give NO memory-term
     reduction — XLA fuses the upcast chain — while adding rounding noise;
@@ -253,6 +341,12 @@ def qlinear(p: dict, x: jax.Array, name: str, qcfg: QuantConfig, eq: str,
     w = p["w"]
     aspec = act_spec(qcfg, kind)
     wspec = weight_spec(qcfg, kind)
+    if _fused_eligible_batched(qcfg, aspec, wspec, eq, p, w):
+        y = _fused_qat_linear_batched(p, x, aspec, wspec,
+                                      out_dtype=jnp.float32).astype(cdtype)
+        if "b" in p:
+            y = y + p["b"].astype(cdtype)
+        return y
     if _fused_eligible(qcfg, aspec, wspec, eq, p, w):
         y = _fused_qat_linear(p, x, aspec, wspec, FUSED_EQS[eq],
                               out_dtype=jnp.float32).astype(cdtype)
@@ -366,20 +460,42 @@ def lm_head_apply(p: dict, x: jax.Array, qcfg: QuantConfig, vocab_size: int,
     """Project to (padded) vocab logits in f32; mask padding columns.
 
     The untied QAT and serving projections dispatch to the fused Pallas path
-    like qlinear (eq "bsd,dv->bsv"); the tied-embedding variant stays on the
-    unfused composition (its weight is the transposed embedding — fusing it
-    is a ROADMAP open item).
+    like qlinear (eq "bsd,dv->bsv"); the tied-embedding QAT variant fuses
+    too, treating the transposed latent embedding as an N-side per-tensor
+    weight (g factors and scale cotangents are orientation-invariant, so the
+    shared w_scale gradient matches the embedding's own). Only the serving
+    tied head (int codes, no latent weight) and 1-bit edges stay unfused.
     """
     if tied_embed is not None:
-        w = quantized_weight(tied_embed, "embed", qcfg).T  # (d, V)
-        w = w.astype(jnp.bfloat16)
         aspec = act_spec(qcfg, "lm_head")
-        if aspec is not None and "a_scale" in p:
-            x = fake_quant(x.astype(jnp.float32), p["a_scale"], aspec,
-                           offset=p.get("a_offset"), grad_scale_ref=w)
-        logits = jnp.einsum("bsd,dv->bsv", x.astype(jnp.bfloat16),
-                            w.astype(jnp.bfloat16),
-                            preferred_element_type=jnp.float32)
+        wspec = weight_spec(qcfg, "embed")
+        if ("w" in tied_embed and "w_scale" in tied_embed
+                and jnp.ndim(tied_embed["w_scale"]) == 0
+                and "a_scale" in p and _use_fused(qcfg)
+                and aspec is not None and wspec is not None
+                and aspec.bits != 1 and wspec.bits != 1):
+            pseudo = {"w": tied_embed["w"].T,  # (d, V) latent f32
+                      "w_scale": tied_embed["w_scale"],
+                      "a_scale": p["a_scale"]}
+            if "a_offset" in p:
+                pseudo["a_offset"] = p["a_offset"]
+            # unfused tied einsum is preferred_element_type=f32 -> no bf16
+            # cotangent rounding, same as the untied fused branch below
+            logits = _fused_qat_linear(pseudo, x, aspec, wspec, 1,
+                                       out_dtype=jnp.float32,
+                                       cotangent_rounding=False)
+        else:
+            w_latent = tied_embed.get("w")
+            w = quantized_weight(tied_embed, "embed", qcfg).T  # (d, V)
+            if aspec is not None and "a_scale" in p:
+                # the module-wise g factor (Sec. 4.4.1) must come from the
+                # latent f32 weight, not the rounded/bf16-cast dequant
+                ref = w_latent.T if w_latent is not None else w
+                x = fake_quant(x.astype(jnp.float32), p["a_scale"], aspec,
+                               offset=p.get("a_offset"), grad_scale_ref=ref)
+            logits = jnp.einsum("bsd,dv->bsv", x.astype(jnp.bfloat16),
+                                w.astype(jnp.bfloat16),
+                                preferred_element_type=jnp.float32)
     elif "codes" in p or "codes4" in p:
         logits = _serving_linear(p, x, "lm_head", qcfg, "bsd,dv->bsv",
                                  jnp.bfloat16, out_dtype=jnp.float32)

@@ -6,9 +6,13 @@ and gathered back weighted by their gates. Over-capacity tokens are dropped
 (standard capacity routing; the residual path carries them).
 
 Expert weights are stored (E, d_in, d_out) so the paper's MDQ generalizes to
-per-EXPERT scales (beyond-paper, DESIGN.md Sec. 5). Sharding: the expert
-axis maps to the "model" mesh axis when divisible (EP), otherwise d_ff does
-(TP within experts) — dist/sharding.py decides per shape.
+per-EXPERT scales (beyond-paper, DESIGN.md Sec. 5). Under QAT the expert
+einsums `gecd,edf->gecf` / `gecf,efd->gecd` dispatch to the batched fused
+Pallas quant-matmul (kernels/quant_matmul, expert axis = kernel grid axis,
+per-expert scales indexed by program_id); the router deliberately stays on
+the f32 einsum. Sharding: the expert axis maps to the "model" mesh axis when
+divisible (EP), otherwise d_ff does (TP within experts) — dist/sharding.py
+decides per shape.
 """
 from __future__ import annotations
 
@@ -101,7 +105,7 @@ def moe_ffn(p: dict, x: jax.Array, cfg: ArchConfig, qcfg: QuantConfig,
         lambda xx, ee: _route_group(xx, None, ee, c, e, k, cdtype),
         in_axes=(0, 0))(xg, ei)                             # buf: (g, e, c, d)
 
-    # --- expert compute (batched over groups; per-expert quant scales) -----
+    # --- expert compute (batched fused quant-matmul; per-expert scales) ----
     if cfg.ffn_gated:
         gt = qlinear(p["moe_gate"], buf, "moe_gate", qcfg, "gecd,edf->gecf", cdtype)
         u = qlinear(p["moe_in"], buf, "moe_in", qcfg, "gecd,edf->gecf", cdtype)

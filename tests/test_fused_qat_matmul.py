@@ -82,14 +82,60 @@ def test_wo_per_tensor_parity(key, rng):
     _grad_parity(p, x, "wo", "bshk,hkd->bsd", q_off, q_on)
 
 
-def test_wo_per_head_falls_back(key, rng):
-    """K-side per-head scale isn't fused yet: both configs bit-identical."""
-    p = C.linear_init(key, "wo", Q_OFF, (6, 24, 40), std=0.1, group_axes=(0,))
+@pytest.mark.parametrize("name", ["wo", "xo"])
+def test_wo_per_head_parity(key, rng, name):
+    """K-side per-HEAD scale (MDQ output projections): groups live on the
+    contracted axes, dequantized per K-tile with the Eq. 6-7 scale gradient
+    group-summed along K."""
+    p = C.linear_init(key, name, Q_OFF, (6, 24, 40), std=0.1, group_axes=(0,))
     assert p["w_scale"].shape == (6, 1, 1)
+    p["a_scale"] = jnp.asarray(0.3)
+    p["a_offset"] = jnp.asarray(0.02)
+    x = jnp.asarray(rng.standard_normal((2, 7, 6, 24)), jnp.bfloat16)
+    y_off = C.qlinear(p, x, name, Q_OFF, "bshk,hkd->bsd")
+    y_on = C.qlinear(p, x, name, Q_ON, "bshk,hkd->bsd")
+    _close(y_off, y_on, 1e-5)
+    _grad_parity(p, x, name, "bshk,hkd->bsd", Q_OFF, Q_ON)
+
+
+def test_mixed_side_scale_falls_back(key, rng):
+    """A scale with groups on BOTH sides of the 2D reshape (no policy emits
+    one) must take the unfused composition: both configs bit-identical."""
+    from repro.core.quantizer import init_scale
+    from repro.core.policy import weight_spec
+    p = C.linear_init(key, "wo", Q_OFF, (6, 24, 40), std=0.1, group_axes=(0,))
+    p["w_scale"] = init_scale(p["w"], weight_spec(Q_OFF, "attn_o"), (0, 2))
+    assert p["w_scale"].shape == (6, 1, 40)
     x = jnp.asarray(rng.standard_normal((2, 7, 6, 24)), jnp.bfloat16)
     y_off = C.qlinear(p, x, "wo", Q_OFF, "bshk,hkd->bsd")
     y_on = C.qlinear(p, x, "wo", Q_ON, "bshk,hkd->bsd")
     assert bool(jnp.all(y_off == y_on))
+
+
+# ---------------------------------------------------------------------------
+# MoE batched expert einsums (per-expert scales)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name,eq,shape,xshape", [
+    ("moe_in", "gecd,edf->gecf", (3, 32, 40), (2, 3, 6, 32)),
+    ("moe_out", "gecf,efd->gecd", (3, 40, 32), (2, 3, 6, 40)),
+])
+@pytest.mark.parametrize("mode", ["mdq", "lsq"])
+def test_moe_expert_parity(key, rng, name, eq, shape, xshape, mode):
+    """Batched expert matmul: per-EXPERT scales (mdq) and per-tensor (lsq)
+    both ride the expert-grid kernel; five-gradient parity vs unfused."""
+    q_off = QuantConfig(w_bits=4, a_bits=4, mode=mode, fused_matmul="off")
+    q_on = q_off.replace(fused_matmul="on")
+    p = C.linear_init(key, name, q_off, shape, std=0.1, group_axes=(0,))
+    assert p["w_scale"].shape == ((3, 1, 1) if mode == "mdq" else ())
+    p["a_scale"] = jnp.asarray(0.3)
+    p["a_offset"] = jnp.asarray(0.02)
+    x = jnp.asarray(rng.standard_normal(xshape), jnp.bfloat16)
+    y_off = C.qlinear(p, x, name, q_off, eq)
+    y_on = C.qlinear(p, x, name, q_on, eq)
+    assert y_on.shape == y_off.shape
+    _close(y_off, y_on, 1e-5)
+    _grad_parity(p, x, name, eq, q_off, q_on)
 
 
 def test_lm_head_parity(key, rng):
@@ -109,6 +155,59 @@ def test_lm_head_parity(key, rng):
     for k in g_off:
         scale = max(float(jnp.max(jnp.abs(g_off[k]))), 1.0)
         _close(g_off[k] / scale, g_on[k] / scale, 1e-4)
+
+
+def test_tied_lm_head_parity(key, rng):
+    """Tied-embedding head: the transposed latent embedding rides the fused
+    path as an N-side per-tensor weight; shared-w_scale gradient included."""
+    emb = C.embed_init(key, Q_OFF, 160, 48)
+    p = C.tied_head_act_init(Q_OFF)
+    p["a_scale"] = jnp.asarray(0.4)
+    p["a_offset"] = jnp.asarray(0.01)
+    x = jnp.asarray(rng.standard_normal((2, 5, 48)), jnp.bfloat16)
+    lg_off = C.lm_head_apply(p, x, Q_OFF, 150, 160, tied_embed=emb)
+    lg_on = C.lm_head_apply(p, x, Q_ON, 150, 160, tied_embed=emb)
+    assert lg_off.dtype == lg_on.dtype == jnp.float32
+    _close(lg_off, lg_on, 1e-5)
+
+    def loss(p, emb, x, qcfg):
+        lg = C.lm_head_apply(p, x, qcfg, 150, 160, tied_embed=emb)
+        return jnp.sum(jnp.tanh(lg * 0.05))
+
+    gp_off, ge_off = jax.grad(loss, argnums=(0, 1))(p, emb, x, Q_OFF)
+    gp_on, ge_on = jax.grad(loss, argnums=(0, 1))(p, emb, x, Q_ON)
+    for g_off, g_on in [(gp_off, gp_on), (ge_off, ge_on)]:
+        for k in g_off:
+            scale = max(float(jnp.max(jnp.abs(g_off[k]))), 1.0)
+            _close(g_off[k] / scale, g_on[k] / scale, 1e-4)
+
+
+def test_tied_head_grad_scale_ref_matches_untied(key, rng):
+    """Regression: the tied head's module-wise g factor (Sec. 4.4.1) must
+    come from the LATENT f32 embedding, not the rounded bf16-cast dequant —
+    its activation-scale gradient must equal an untied head holding the
+    transposed embedding with the same scales."""
+    emb = C.embed_init(key, Q_OFF, 160, 48)
+    pt = C.tied_head_act_init(Q_OFF)
+    pt["a_scale"] = jnp.asarray(0.4)
+    pt["a_offset"] = jnp.asarray(0.01)
+    pu = {"w": emb["w"].T, "w_scale": emb["w_scale"],
+          "a_scale": pt["a_scale"], "a_offset": pt["a_offset"]}
+    x = jnp.asarray(rng.standard_normal((2, 5, 48)), jnp.bfloat16)
+
+    def loss_t(pt):
+        lg = C.lm_head_apply(pt, x, Q_OFF, 150, 160, tied_embed=emb)
+        return jnp.sum(jnp.tanh(lg * 0.05))
+
+    def loss_u(pu):
+        lg = C.lm_head_apply(pu, x, Q_OFF, 150, 160)
+        return jnp.sum(jnp.tanh(lg * 0.05))
+
+    gt = jax.grad(loss_t)(pt)
+    gu = jax.grad(loss_u)(pu)
+    for k in ("a_scale", "a_offset"):
+        scale = max(float(jnp.max(jnp.abs(gu[k]))), 1e-12)
+        _close(gt[k] / scale, gu[k] / scale, 1e-5)
 
 
 def test_no_offset_activation_parity(key, rng):
@@ -218,3 +317,28 @@ def test_model_forward_parity_fused(key):
     p_off = jax.nn.softmax(lg_off[..., :cfg.vocab_size], -1)
     assert float(jnp.max(jnp.abs(p_on - p_off))) < 0.02
     assert bool(jnp.all(jnp.argmax(lg_on, -1) == jnp.argmax(lg_off, -1)))
+
+
+def test_moe_model_forward_parity_fused(key):
+    """MoE backbone end-to-end: the batched expert kernels (per-expert
+    scales) compose with the rest of the fused dispatch."""
+    from repro.configs.registry import get_config, reduced_config
+    from repro.models import model as M
+    cfg = reduced_config(get_config("granite-moe-1b-a400m")).replace(n_layers=2)
+    qcfg = QuantConfig(w_bits=4, a_bits=4, mode="mdq")
+    params = M.init_params(key, cfg, qcfg)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0,
+                                cfg.vocab_size)
+    lg_off, _ = M.forward(params, {"tokens": tokens}, cfg,
+                          qcfg.replace(fused_matmul="off"))
+    lg_on, _ = M.forward(params, {"tokens": tokens}, cfg,
+                         qcfg.replace(fused_matmul="on"))
+    d = np.abs(np.asarray(lg_on) - np.asarray(lg_off))
+    assert np.isfinite(np.asarray(lg_on)).all()
+    # same functional-parity bar as the dense model test above (router stays
+    # f32/unfused in both configs, so expert assignment is identical)
+    assert np.quantile(d, 0.9) < 1e-3, np.quantile(d, 0.9)
+    assert d.mean() < 0.05, d.mean()
+    p_on = jax.nn.softmax(lg_on[..., :cfg.vocab_size], -1)
+    p_off = jax.nn.softmax(lg_off[..., :cfg.vocab_size], -1)
+    assert float(jnp.max(jnp.abs(p_on - p_off))) < 0.02

@@ -1,0 +1,114 @@
+"""Fallback-boundary routing matrix for the fused quant-matmul dispatch.
+
+For every FUSED_EQS / FUSED_BATCHED_EQS entry x weight-scale shape family
+(per-tensor, N-side per-column-group, K-side per-head, per-expert, mixed),
+assert WHICH path qlinear takes — fused kernel vs pure-jnp fallback — by
+spying on kernels.ops. A future dispatch change that silently demotes a
+covered shape to the fallback fails tier-1 instead of just getting slower.
+
+The spies return correctly-shaped zeros, so no Pallas kernel actually runs:
+this is a pure dispatch test and stays fast across the full matrix.
+"""
+import jax.numpy as jnp
+import pytest
+
+from repro.core.policy import QuantConfig
+from repro.models import common as C
+
+Q_ON = QuantConfig(w_bits=4, a_bits=4, mode="mdq", fused_matmul="on")
+
+# Small per-letter dims covering every einsum index used by the dispatch.
+_DIM = {"b": 2, "s": 3, "d": 8, "f": 10, "h": 2, "k": 4, "u": 6, "v": 12,
+        "w": 7, "g": 2, "e": 3, "c": 5, "t": 4}
+
+
+def _shapes(eq):
+    lhs, _ = eq.split("->")
+    x_l, w_l = lhs.split(",")
+    return tuple(_DIM[c] for c in x_l), tuple(_DIM[c] for c in w_l)
+
+
+def _scale_shape(kind, w_shape, n_k):
+    r = len(w_shape)
+    if kind == "per_tensor":
+        return ()
+    s = [1] * r
+    if kind == "cols":          # groups on the first N-side axis
+        s[n_k] = w_shape[n_k]
+    elif kind == "kside":       # groups on the first contracted axis
+        s[0] = w_shape[0]
+    elif kind == "mixed":       # groups straddle both sides: never fused
+        s[0] = w_shape[0]
+        s[-1] = w_shape[-1]
+    return tuple(s)
+
+
+def _spies(monkeypatch):
+    calls = []
+
+    def spy2d(x2, w2, s_a, b_a, ws, aspec, wspec, **kw):
+        calls.append("2d")
+        return jnp.zeros(x2.shape[:-1] + (w2.shape[-1],),
+                         kw.get("out_dtype", jnp.float32))
+
+    def spy3d(x3, w3, s_a, b_a, ws, aspec, wspec, **kw):
+        calls.append("3d")
+        return jnp.zeros((x3.shape[0], x3.shape[1], w3.shape[-1]),
+                         kw.get("out_dtype", jnp.float32))
+
+    monkeypatch.setattr(C.ops, "fused_qat_matmul", spy2d)
+    monkeypatch.setattr(C.ops, "fused_qat_matmul_batched", spy3d)
+    return calls
+
+
+def _run(eq, scale_shape, name):
+    x_shape, w_shape = _shapes(eq)
+    p = {"w": jnp.full(w_shape, 0.05, jnp.float32),
+         "w_scale": jnp.full(scale_shape, 0.1, jnp.float32),
+         "a_scale": jnp.asarray(0.5), "a_offset": jnp.asarray(0.1)}
+    x = jnp.ones(x_shape, jnp.bfloat16)
+    y = C.qlinear(p, x, name, Q_ON, eq)
+    assert jnp.isfinite(y.astype(jnp.float32)).all()
+
+
+@pytest.mark.parametrize("scale_kind,fused", [
+    ("per_tensor", True), ("cols", True), ("kside", True), ("mixed", False),
+])
+@pytest.mark.parametrize("eq", sorted(C.FUSED_EQS))
+def test_routing_2d(monkeypatch, eq, scale_kind, fused):
+    n_k = C.FUSED_EQS[eq]
+    _, w_shape = _shapes(eq)
+    if scale_kind == "mixed" and len(w_shape) == n_k:
+        pytest.skip("no N-side axis to straddle")
+    calls = _spies(monkeypatch)
+    _run(eq, _scale_shape(scale_kind, w_shape, n_k), "w_in")
+    assert calls == (["2d"] if fused else [])
+
+
+@pytest.mark.parametrize("scale_kind,fused", [
+    ("per_tensor", True), ("per_expert", True), ("cols", True),
+    ("kside", False),
+])
+@pytest.mark.parametrize("eq", sorted(C.FUSED_BATCHED_EQS))
+def test_routing_batched(monkeypatch, eq, scale_kind, fused):
+    _, w_shape = _shapes(eq)          # (E, K, N)
+    if scale_kind == "per_expert":
+        scale_shape = (w_shape[0], 1, 1)
+    elif scale_kind == "cols":
+        scale_shape = (1, 1, w_shape[2])
+    elif scale_kind == "kside":       # groups on the contracted expert axis 1
+        scale_shape = (1, w_shape[1], 1)
+    else:
+        scale_shape = ()
+    calls = _spies(monkeypatch)
+    _run(eq, scale_shape, "moe_in")
+    assert calls == (["3d"] if fused else [])
+
+
+def test_router_eq_never_fused(monkeypatch):
+    """The MoE router einsum is deliberately absent from FUSED_EQS (f32
+    determinism for top-k routing)."""
+    assert "td,de->te" not in C.FUSED_EQS
+    calls = _spies(monkeypatch)
+    _run("td,de->te", (), "router")
+    assert calls == []

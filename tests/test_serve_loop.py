@@ -1,0 +1,54 @@
+"""Decode-loop accounting for the serving launcher's greedy_generate.
+
+Regression for the off-by-one the old loop had: it ran a final decode whose
+argmax was discarded — one wasted jit step per request. Exactly
+`prompt_len + new_tokens - 1` decode steps must emit `new_tokens` tokens,
+and the final decode's argmax must be emitted, not thrown away.
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.launch.serve import greedy_generate
+
+_V = 11
+
+
+def _stub_decode(calls):
+    """Deterministic stand-in for M.decode_step: argmax(logits at pos p)
+    is (p + 1) % _V, so the expected greedy sequence is computable."""
+    def decode(params, cache, b):
+        calls.append(int(b["pos"][0]))
+        logits = jax.nn.one_hot((b["pos"] + 1) % _V, _V,
+                                dtype=jnp.float32)[:, None, :]
+        return logits, cache
+    return decode
+
+
+def test_exact_decode_step_count_and_tokens():
+    batch, prompt_len, new_tokens = 3, 5, 4
+    prompts = jnp.zeros((batch, prompt_len), jnp.int32)
+    calls = []
+    toks, _ = greedy_generate(_stub_decode(calls), None, {}, prompts,
+                              new_tokens)
+    # prompt steps 0..4, then new_tokens-1 = 3 decode steps at pos 5,6,7:
+    # the last argmax is EMITTED (old loop ran pos 8 and discarded it).
+    assert calls == list(range(prompt_len + new_tokens - 1))
+    assert toks.shape == (batch, new_tokens)
+    want = [(prompt_len + i) % _V for i in range(new_tokens)]
+    assert toks[0].tolist() == want
+    assert toks[-1].tolist() == want
+
+
+def test_single_token_needs_no_decode_after_prompt():
+    prompts = jnp.zeros((2, 3), jnp.int32)
+    calls = []
+    toks, _ = greedy_generate(_stub_decode(calls), None, {}, prompts, 1)
+    assert calls == [0, 1, 2]  # prompt only: token comes from its last logits
+    assert toks.shape == (2, 1) and int(toks[0, 0]) == 3 % _V
+
+
+def test_zero_tokens():
+    prompts = jnp.zeros((2, 3), jnp.int32)
+    calls = []
+    toks, _ = greedy_generate(_stub_decode(calls), None, {}, prompts, 0)
+    assert calls == [0, 1, 2] and toks.shape == (2, 0)
