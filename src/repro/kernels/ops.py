@@ -7,8 +7,10 @@ QuantSpec plumbing, and the interpret flag (True on CPU; False on real TPU —
 `fused_qat_matmul` is the differentiable entry point: a jax.custom_vjp whose
 forward AND backward are single Pallas kernels (one HBM round trip each —
 the backward is ONE combined dX/dW kernel sharing a single staging of
-dY/X/W), with the LSQ/LSQ+ gradients (Eq. 6-7) recomputed tile-wise in
-VMEM. Weight scales ride as an N-side (N,) column vector or a K-side (K,)
+dY/X/W, bounded by a VMEM scratch budget: shapes whose dW row panel would
+not fit, e.g. lm_head-vocab N, dispatch to the split dx/dw kernels inside
+quant_matmul_bwd), with the LSQ/LSQ+ gradients (Eq. 6-7) recomputed
+tile-wise in VMEM. Weight scales ride as an N-side (N,) column vector or a K-side (K,)
 row vector (`w_scale_axis`, per-head wo/xo); `fused_qat_matmul_batched`
 covers the MoE (E, M, K) @ (E, K, N) expert matmul with per-expert scales.
 The module-wise gradient scale g and per-group scale reductions are applied

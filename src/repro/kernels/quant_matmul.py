@@ -35,6 +35,13 @@ from jax.experimental.pallas import tpu as pltpu
 
 DEFAULT_TILES = (128, 128, 512)  # (bm, bn, bk) — MXU-aligned
 
+# VMEM ceiling for the combined backward's scratch accumulators (its dW row
+# panel is (bk, Np) f32 — unbounded in N). ~16MB VMEM/core on current TPUs;
+# 8MB leaves room for the double-buffered in/out blocks. Past this,
+# quant_matmul_bwd[_batched] falls back to the split dx/dw kernels, whose
+# scratches are tile-sized (see bwd_uses_combined).
+BWD_SCRATCH_BUDGET_BYTES = 8 * 1024 * 1024
+
 
 def _qmm_kernel(x_ref, w_ref, as_ref, ab_ref, ws_ref, o_ref, acc_ref, *,
                 q_n_a, q_p_a, q_n_w, q_p_w, n_k):
@@ -231,15 +238,17 @@ def _qmm_dx_kernel(dy_ref, w_ref, ws_ref, x_ref, as_ref, ab_ref,
 
 @functools.partial(jax.jit, static_argnames=("q_n_a", "q_p_a", "q_n_w", "q_p_w",
                                              "round_cot", "tiles", "interpret"))
-def quant_matmul_dx(dy, x, w, a_scale, a_offset, w_col_scale, *,
+def quant_matmul_dx(dy, x, w, a_scale, a_offset, w_scale, *,
                     q_n_a: int, q_p_a: int, q_n_w: int, q_p_w: int,
                     round_cot: bool = True,
                     tiles=DEFAULT_TILES, interpret: bool = True):
     """Backward wrt x of quant_matmul: (dX, d a_scale_raw, d a_offset_raw).
 
-    dy: (M, N); x: (M, K); w: (K, N); w_col_scale: (1, N). The scale/offset
-    cotangents are the RAW range-indicator sums — the caller applies the
-    module-wise gradient scale g (via core.quantizer.grad_scale, outside).
+    dy: (M, N); x: (M, K); w: (K, N); w_scale: (1, N) column groups or
+    (K, 1) row groups (K-side per-head scales, dequant only). The
+    scale/offset cotangents are the RAW range-indicator sums — the caller
+    applies the module-wise gradient scale g (via core.quantizer.grad_scale,
+    outside).
     """
     m, k = x.shape
     _, n = w.shape
@@ -247,6 +256,11 @@ def quant_matmul_dx(dy, x, w, a_scale, a_offset, w_col_scale, *,
     bn = min(tiles[1], n)
     bk = min(tiles[2], k)
     grid = (pl.cdiv(m, bm), pl.cdiv(k, bk), pl.cdiv(n, bn))
+    if w_scale.shape[0] == 1:
+        ws_spec = pl.BlockSpec((1, bn), lambda i, kk, j: (0, j))
+    else:
+        assert w_scale.shape[1] == 1, w_scale.shape
+        ws_spec = pl.BlockSpec((bk, 1), lambda i, kk, j: (kk, 0))
     a_s = jnp.reshape(jnp.asarray(a_scale, jnp.float32), (1, 1))
     a_b = jnp.reshape(jnp.asarray(a_offset, jnp.float32), (1, 1))
     dx, dsa, dba = pl.pallas_call(
@@ -257,7 +271,7 @@ def quant_matmul_dx(dy, x, w, a_scale, a_offset, w_col_scale, *,
         in_specs=[
             pl.BlockSpec((bm, bn), lambda i, kk, j: (i, j)),
             pl.BlockSpec((bk, bn), lambda i, kk, j: (kk, j)),
-            pl.BlockSpec((1, bn), lambda i, kk, j: (0, j)),
+            ws_spec,
             pl.BlockSpec((bm, bk), lambda i, kk, j: (i, kk)),
             pl.BlockSpec((1, 1), lambda i, kk, j: (0, 0)),
             pl.BlockSpec((1, 1), lambda i, kk, j: (0, 0)),
@@ -274,14 +288,14 @@ def quant_matmul_dx(dy, x, w, a_scale, a_offset, w_col_scale, *,
         ],
         scratch_shapes=[pltpu.VMEM((bm, bk), jnp.float32)],
         interpret=interpret,
-    )(dy, w, w_col_scale.astype(jnp.float32), x, a_s, a_b)
+    )(dy, w, w_scale.astype(jnp.float32), x, a_s, a_b)
     return dx, dsa.reshape(()), dba.reshape(())
 
 
 def _qmm_dw_kernel(x_ref, dy_ref, as_ref, ab_ref, w_ref, ws_ref,
-                   dw_ref, dws_ref, acc_ref, *,
-                   q_n_a, q_p_a, q_n_w, q_p_w, n_m, round_cot):
-    kk, i = pl.program_id(1), pl.program_id(2)
+                   dw_ref, dws_ref, acc_ref, dws_acc, *,
+                   q_n_a, q_p_a, q_n_w, q_p_w, n_m, n_j, round_cot, k_side):
+    j, kk, i = pl.program_id(0), pl.program_id(1), pl.program_id(2)
 
     @pl.when(i == 0)
     def _init():
@@ -310,27 +324,50 @@ def _qmm_dw_kernel(x_ref, dy_ref, as_ref, ab_ref, w_ref, ws_ref,
                              u <= float(q_p_w)).astype(jnp.float32)
         q = jnp.clip(jnp.round(u), -float(q_n_w), float(q_p_w))
         dw_ref[...] = (dwd * mf).astype(dw_ref.dtype)
-        part = jnp.sum(dwd * (q - mf * u), axis=0, keepdims=True)
+        if k_side:
+            # block (kk, 0) is revisited across j NON-consecutively (j is
+            # outermost here): accumulate in the persistent scratch and write
+            # the output block once, on its final visit
+            part = jnp.sum(dwd * (q - mf * u), axis=1, keepdims=True)
+            ksl = pl.dslice(kk * w_ref.shape[0], w_ref.shape[0])
 
-        @pl.when(kk == 0)
-        def _first():
-            dws_ref[...] = part
+            @pl.when(j == 0)
+            def _first():
+                dws_acc[ksl, :] = part
 
-        @pl.when(kk > 0)
-        def _rest():
-            dws_ref[...] += part
+            @pl.when(j > 0)
+            def _rest():
+                dws_acc[ksl, :] += part
+
+            @pl.when(j == n_j - 1)
+            def _emit():
+                dws_ref[...] = dws_acc[ksl, :]
+        else:
+            # block (0, j) is resident for the whole j run (its index map
+            # ignores kk and i): in-ref accumulation over kk is legal
+            part = jnp.sum(dwd * (q - mf * u), axis=0, keepdims=True)
+
+            @pl.when(kk == 0)
+            def _first():
+                dws_ref[...] = part
+
+            @pl.when(kk > 0)
+            def _rest():
+                dws_ref[...] += part
 
 
 @functools.partial(jax.jit, static_argnames=("q_n_a", "q_p_a", "q_n_w", "q_p_w",
                                              "round_cot", "tiles", "interpret"))
-def quant_matmul_dw(dy, x, w, a_scale, a_offset, w_col_scale, *,
+def quant_matmul_dw(dy, x, w, a_scale, a_offset, w_scale, *,
                     q_n_a: int, q_p_a: int, q_n_w: int, q_p_w: int,
                     round_cot: bool = True,
                     tiles=DEFAULT_TILES, interpret: bool = True):
-    """Backward wrt w of quant_matmul: (dW, d w_col_scale_raw (1, N)).
+    """Backward wrt w of quant_matmul: (dW, d w_scale_raw).
 
-    Per-column scale cotangents are summed over K in-kernel; the caller
-    reduces columns into their scale groups and applies the gradient scale.
+    w_scale (1, N) column groups -> dws (1, N), the per-column cotangent
+    summed over K in-kernel; w_scale (K, 1) row groups (K-side per-head) ->
+    dws (K, 1), summed over N. Either way the caller reduces into the scale
+    groups and applies the gradient scale.
     """
     m, k = x.shape
     _, n = w.shape
@@ -338,12 +375,24 @@ def quant_matmul_dw(dy, x, w, a_scale, a_offset, w_col_scale, *,
     bn = min(tiles[1], n)
     bk = min(tiles[2], k)
     grid = (pl.cdiv(n, bn), pl.cdiv(k, bk), pl.cdiv(m, bm))
+    k_side = w_scale.shape[0] != 1
+    if k_side:
+        assert w_scale.shape[1] == 1, w_scale.shape
+        ws_spec = pl.BlockSpec((bk, 1), lambda j, kk, i: (kk, 0))
+        dws_spec = pl.BlockSpec((bk, 1), lambda j, kk, i: (kk, 0))
+        dws_shape = (k, 1)
+        dws_scratch = pltpu.VMEM((grid[1] * bk, 1), jnp.float32)
+    else:
+        ws_spec = pl.BlockSpec((1, bn), lambda j, kk, i: (0, j))
+        dws_spec = pl.BlockSpec((1, bn), lambda j, kk, i: (0, j))
+        dws_shape = (1, n)
+        dws_scratch = pltpu.VMEM((1, 1), jnp.float32)
     a_s = jnp.reshape(jnp.asarray(a_scale, jnp.float32), (1, 1))
     a_b = jnp.reshape(jnp.asarray(a_offset, jnp.float32), (1, 1))
     dw, dws = pl.pallas_call(
         functools.partial(_qmm_dw_kernel, q_n_a=q_n_a, q_p_a=q_p_a,
-                          q_n_w=q_n_w, q_p_w=q_p_w, n_m=grid[2],
-                          round_cot=round_cot),
+                          q_n_w=q_n_w, q_p_w=q_p_w, n_m=grid[2], n_j=grid[0],
+                          round_cot=round_cot, k_side=k_side),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bm, bk), lambda j, kk, i: (i, kk)),
@@ -351,19 +400,19 @@ def quant_matmul_dw(dy, x, w, a_scale, a_offset, w_col_scale, *,
             pl.BlockSpec((1, 1), lambda j, kk, i: (0, 0)),
             pl.BlockSpec((1, 1), lambda j, kk, i: (0, 0)),
             pl.BlockSpec((bk, bn), lambda j, kk, i: (kk, j)),
-            pl.BlockSpec((1, bn), lambda j, kk, i: (0, j)),
+            ws_spec,
         ],
         out_specs=[
             pl.BlockSpec((bk, bn), lambda j, kk, i: (kk, j)),
-            pl.BlockSpec((1, bn), lambda j, kk, i: (0, j)),
+            dws_spec,
         ],
         out_shape=[
             jax.ShapeDtypeStruct((k, n), jnp.float32),
-            jax.ShapeDtypeStruct((1, n), jnp.float32),
+            jax.ShapeDtypeStruct(dws_shape, jnp.float32),
         ],
-        scratch_shapes=[pltpu.VMEM((bk, bn), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((bk, bn), jnp.float32), dws_scratch],
         interpret=interpret,
-    )(x, dy, a_s, a_b, w, w_col_scale.astype(jnp.float32))
+    )(x, dy, a_s, a_b, w, w_scale.astype(jnp.float32))
     return dw, dws
 
 
@@ -388,13 +437,24 @@ def quant_matmul_dw(dy, x, w, a_scale, a_offset, w_col_scale, *,
 # The entry boundary therefore reads dY/X/W once and writes each output once
 # — ~1.5x less modeled backward traffic than the two split kernels (see
 # BENCH_kernels.json qat_bwd.combined_vs_split). The (bk, Np) panel bounds
-# N by VMEM; tiles stay the MXU defaults, matching the split kernels.
+# N by VMEM: past BWD_SCRATCH_BUDGET_BYTES the wrapper falls back to the
+# split dx/dw kernels, whose scratches are tile-sized (lm_head-vocab N never
+# tries to allocate the panel). Tiles stay the MXU defaults either way.
+#
+# Output-residency note: Pallas TPU keeps an output block in VMEM only
+# across CONSECUTIVE grid steps that map to it. The (1, Np) column-scale
+# cotangent is reduced over the OUTERMOST kk axis while its block index
+# tracks the innermost j, so it is accumulated in a persistent VMEM scratch
+# and each output block is written exactly once, on its final visit.
+# (The (Kp, 1) row-scale cotangent's block index tracks kk itself, so it
+# stays resident for the whole kk run and in-ref accumulation is legal.)
 
 
 def _qmm_bwd_kernel(dy_ref, x_ref, w_ref, as_ref, ab_ref, ws_ref,
                     dx_ref, dsa_ref, dba_ref, dw_ref, dws_ref,
-                    dx_acc, dw_acc, *,
-                    q_n_a, q_p_a, q_n_w, q_p_w, n_i, n_j, round_cot, k_side):
+                    dx_acc, dw_acc, dws_acc, *,
+                    q_n_a, q_p_a, q_n_w, q_p_w, n_k, n_i, n_j, round_cot,
+                    k_side):
     kk, i, j = pl.program_id(0), pl.program_id(1), pl.program_id(2)
     bn = dy_ref.shape[-1]
 
@@ -460,6 +520,8 @@ def _qmm_bwd_kernel(dy_ref, x_ref, w_ref, as_ref, ab_ref, ws_ref,
                               u_w <= float(q_p_w)).astype(jnp.float32)
         dw_ref[...] = (dwd * mfw).astype(dw_ref.dtype)
         if k_side:
+            # block (kk, 0) is resident for the whole kk run (its index map
+            # ignores i and j): in-ref accumulation over j is legal
             part = jnp.sum(dwd * (qw - mfw * u_w), axis=1, keepdims=True)
 
             @pl.when(j == 0)
@@ -470,23 +532,50 @@ def _qmm_bwd_kernel(dy_ref, x_ref, w_ref, as_ref, ab_ref, ws_ref,
             def _rest():
                 dws_ref[...] += part
         else:
+            # block (0, j) is revisited across kk NON-consecutively (j is
+            # innermost): accumulate in the persistent scratch and write the
+            # output block once, on its final visit
             part = jnp.sum(dwd * (qw - mfw * u_w), axis=0, keepdims=True)
 
             @pl.when(kk == 0)
             def _first():
-                dws_ref[...] = part
+                dws_acc[:, jsl] = part
 
             @pl.when(kk > 0)
             def _rest():
-                dws_ref[...] += part
+                dws_acc[:, jsl] += part
+
+            @pl.when(kk == n_k - 1)
+            def _emit():
+                dws_ref[...] = dws_acc[:, jsl]
+
+
+def bwd_scratch_bytes(m, k, n, tiles=DEFAULT_TILES):
+    """f32 scratch footprint of the combined backward: the (bm, bk) dX
+    accumulator, the (bk, Np) dW row panel, and the (1, Np) dws scratch."""
+    bm = min(tiles[0], m)
+    bn = min(tiles[1], n)
+    bk = min(tiles[2], k)
+    n_pad = -(-n // bn) * bn
+    return 4 * (bm * bk + bk * n_pad + n_pad)
+
+
+def bwd_uses_combined(m, k, n, tiles=DEFAULT_TILES, scratch_budget=None):
+    """Whether the combined backward's scratch fits the VMEM budget; past it
+    quant_matmul_bwd[_batched] falls back to the split dx/dw kernels."""
+    budget = (BWD_SCRATCH_BUDGET_BYTES if scratch_budget is None
+              else scratch_budget)
+    return bwd_scratch_bytes(m, k, n, tiles) <= budget
 
 
 @functools.partial(jax.jit, static_argnames=("q_n_a", "q_p_a", "q_n_w", "q_p_w",
-                                             "round_cot", "tiles", "interpret"))
+                                             "round_cot", "tiles", "interpret",
+                                             "scratch_budget"))
 def quant_matmul_bwd(dy, x, w, a_scale, a_offset, w_scale, *,
                      q_n_a: int, q_p_a: int, q_n_w: int, q_p_w: int,
                      round_cot: bool = True,
-                     tiles=DEFAULT_TILES, interpret: bool = True):
+                     tiles=DEFAULT_TILES, interpret: bool = True,
+                     scratch_budget: int | None = None):
     """Combined backward of quant_matmul — one pallas_call, one HBM read of
     dY/X/W each: (dX, d a_scale_raw, d a_offset_raw, dW, d w_scale_raw).
 
@@ -495,9 +584,21 @@ def quant_matmul_bwd(dy, x, w, a_scale, a_offset, w_scale, *,
     the caller applies the module-wise gradient scale g and the per-group
     reduction (via core.quantizer.grad_scale + a differentiable broadcast).
     All dims must be padded to tile multiples by the caller.
+
+    When the (bk, Np) dW panel would exceed `scratch_budget` VMEM bytes
+    (default BWD_SCRATCH_BUDGET_BYTES — lm_head-vocab or very wide d_ff N),
+    dispatches to the split quant_matmul_dx / quant_matmul_dw kernels, whose
+    scratches are tile-sized, and returns the identical cotangent tuple.
     """
     m, k = x.shape
     _, n = w.shape
+    kw = dict(q_n_a=q_n_a, q_p_a=q_p_a, q_n_w=q_n_w, q_p_w=q_p_w,
+              round_cot=round_cot, tiles=tiles, interpret=interpret)
+    if not bwd_uses_combined(m, k, n, tiles, scratch_budget):
+        dx, dsa, dba = quant_matmul_dx(dy, x, w, a_scale, a_offset, w_scale,
+                                       **kw)
+        dw, dws = quant_matmul_dw(dy, x, w, a_scale, a_offset, w_scale, **kw)
+        return dx, dsa, dba, dw, dws
     bm = min(tiles[0], m)
     bn = min(tiles[1], n)
     bk = min(tiles[2], k)
@@ -516,7 +617,8 @@ def quant_matmul_bwd(dy, x, w, a_scale, a_offset, w_scale, *,
         dws_shape = (1, n)
     dx, dsa, dba, dw, dws = pl.pallas_call(
         functools.partial(_qmm_bwd_kernel, q_n_a=q_n_a, q_p_a=q_p_a,
-                          q_n_w=q_n_w, q_p_w=q_p_w, n_i=grid[1], n_j=grid[2],
+                          q_n_w=q_n_w, q_p_w=q_p_w, n_k=grid[0],
+                          n_i=grid[1], n_j=grid[2],
                           round_cot=round_cot, k_side=k_side),
         grid=grid,
         in_specs=[
@@ -542,7 +644,9 @@ def quant_matmul_bwd(dy, x, w, a_scale, a_offset, w_scale, *,
             jax.ShapeDtypeStruct(dws_shape, jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((bm, bk), jnp.float32),
-                        pltpu.VMEM((bk, n_pad), jnp.float32)],
+                        pltpu.VMEM((bk, n_pad), jnp.float32),
+                        pltpu.VMEM((1, 1) if k_side else (1, n_pad),
+                                   jnp.float32)],
         interpret=interpret,
     )(dy, x, w, a_s, a_b, w_scale.astype(jnp.float32))
     return dx, dsa.reshape(()), dba.reshape(()), dw, dws
@@ -550,8 +654,9 @@ def quant_matmul_bwd(dy, x, w, a_scale, a_offset, w_scale, *,
 
 def _qmm_bwd_batched_kernel(dy_ref, x_ref, w_ref, as_ref, ab_ref, ws_ref,
                             dx_ref, dsa_ref, dba_ref, dw_ref, dws_ref,
-                            dx_acc, dw_acc, *,
-                            q_n_a, q_p_a, q_n_w, q_p_w, n_i, n_j, round_cot):
+                            dx_acc, dw_acc, dws_acc, *,
+                            q_n_a, q_p_a, q_n_w, q_p_w, n_k, n_i, n_j,
+                            round_cot):
     kk, i, j = pl.program_id(1), pl.program_id(2), pl.program_id(3)
     bn = dy_ref.shape[-1]
 
@@ -613,32 +718,60 @@ def _qmm_bwd_batched_kernel(dy_ref, x_ref, w_ref, as_ref, ab_ref, ws_ref,
         mfw = jnp.logical_and(u_w >= -float(q_n_w),
                               u_w <= float(q_p_w)).astype(jnp.float32)
         dw_ref[0] = (dwd * mfw).astype(dw_ref.dtype)
+        # per-expert dws block (ee, j) is revisited across kk NON-consecutively
+        # (j is innermost): accumulate in the persistent scratch (re-initialized
+        # at kk == 0 of every expert) and write the output block on its final
+        # visit only
         part = jnp.sum(dwd * (qw - mfw * u_w), axis=0, keepdims=True)
 
         @pl.when(kk == 0)
         def _first():
-            dws_ref[...] = part
+            dws_acc[:, jsl] = part
 
         @pl.when(kk > 0)
         def _rest():
-            dws_ref[...] += part
+            dws_acc[:, jsl] += part
+
+        @pl.when(kk == n_k - 1)
+        def _emit():
+            dws_ref[...] = dws_acc[:, jsl]
 
 
 @functools.partial(jax.jit, static_argnames=("q_n_a", "q_p_a", "q_n_w", "q_p_w",
-                                             "round_cot", "tiles", "interpret"))
+                                             "round_cot", "tiles", "interpret",
+                                             "scratch_budget"))
 def quant_matmul_bwd_batched(dy, x, w, a_scale, a_offset, w_scale, *,
                              q_n_a: int, q_p_a: int, q_n_w: int, q_p_w: int,
                              round_cot: bool = True,
-                             tiles=DEFAULT_TILES, interpret: bool = True):
+                             tiles=DEFAULT_TILES, interpret: bool = True,
+                             scratch_budget: int | None = None):
     """Per-expert combined backward of quant_matmul_batched.
 
     dy: (E, M, N); x: (E, M, K); w: (E, K, N); a_scale/a_offset: (E, 1);
     w_scale: (E, N). Returns (dX (E,M,K), dsa (E,1), dba (E,1), dW (E,K,N),
     dws (E,N)) with the scale cotangents raw (per-expert range-indicator
     sums); the leading grid dimension runs over experts.
+
+    Shares the 2D kernel's VMEM scratch budget: when the (bk, Np) dW panel
+    would not fit, each expert's cotangents come from the split dx/dw
+    kernels instead (same values, tile-sized scratches).
     """
     e, m, k = x.shape
     _, _, n = w.shape
+    if not bwd_uses_combined(m, k, n, tiles, scratch_budget):
+        kw = dict(q_n_a=q_n_a, q_p_a=q_p_a, q_n_w=q_n_w, q_p_w=q_p_w,
+                  round_cot=round_cot, tiles=tiles, interpret=interpret)
+        outs = []
+        for ee in range(e):
+            dx_e, dsa_e, dba_e = quant_matmul_dx(
+                dy[ee], x[ee], w[ee], a_scale[ee, 0], a_offset[ee, 0],
+                w_scale[ee:ee + 1], **kw)
+            dw_e, dws_e = quant_matmul_dw(
+                dy[ee], x[ee], w[ee], a_scale[ee, 0], a_offset[ee, 0],
+                w_scale[ee:ee + 1], **kw)
+            outs.append((dx_e, dsa_e, dba_e, dw_e, dws_e[0]))
+        dx, dsa, dba, dw, dws = (jnp.stack(t) for t in zip(*outs))
+        return dx, dsa.reshape(e, 1), dba.reshape(e, 1), dw, dws
     bm = min(tiles[0], m)
     bn = min(tiles[1], n)
     bk = min(tiles[2], k)
@@ -646,7 +779,8 @@ def quant_matmul_bwd_batched(dy, x, w, a_scale, a_offset, w_scale, *,
     n_pad = grid[3] * bn
     dx, dsa, dba, dw, dws = pl.pallas_call(
         functools.partial(_qmm_bwd_batched_kernel, q_n_a=q_n_a, q_p_a=q_p_a,
-                          q_n_w=q_n_w, q_p_w=q_p_w, n_i=grid[2], n_j=grid[3],
+                          q_n_w=q_n_w, q_p_w=q_p_w, n_k=grid[1],
+                          n_i=grid[2], n_j=grid[3],
                           round_cot=round_cot),
         grid=grid,
         in_specs=[
@@ -672,7 +806,8 @@ def quant_matmul_bwd_batched(dy, x, w, a_scale, a_offset, w_scale, *,
             jax.ShapeDtypeStruct((e, n), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((bm, bk), jnp.float32),
-                        pltpu.VMEM((bk, n_pad), jnp.float32)],
+                        pltpu.VMEM((bk, n_pad), jnp.float32),
+                        pltpu.VMEM((1, n_pad), jnp.float32)],
         interpret=interpret,
     )(dy, x, w, a_scale.astype(jnp.float32), a_offset.astype(jnp.float32),
       w_scale.astype(jnp.float32))

@@ -34,6 +34,9 @@ def greedy_generate(decode, params, cache, prompts, new_tokens: int):
     thrown away). Returns (tokens (batch, new_tokens), cache).
     """
     batch, prompt_len = prompts.shape
+    assert prompt_len >= 1 or new_tokens <= 0, (
+        "greedy_generate needs at least one prompt token to seed generation "
+        f"(got prompt_len={prompt_len}, new_tokens={new_tokens})")
     logits = None
     for t in range(prompt_len):
         logits, cache = decode(params, cache,

@@ -225,6 +225,90 @@ def test_no_offset_activation_parity(key, rng):
 
 
 # ---------------------------------------------------------------------------
+# combined-backward VMEM budget: the (bk, Np) dW panel is unbounded in N, so
+# oversized shapes (lm_head vocab, wide d_ff) must dispatch to the split
+# dx/dw kernels — same cotangents, tile-sized scratches.
+# ---------------------------------------------------------------------------
+
+from repro.kernels import quant_matmul as qmm
+
+
+def _bwd_operands(rng, m, k, n, k_side):
+    dy = jnp.asarray(rng.standard_normal((m, n)), jnp.float32)
+    x = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((k, n)) * 0.05, jnp.float32)
+    sh = (k, 1) if k_side else (1, n)
+    ws = jnp.asarray(np.abs(rng.standard_normal(sh)) * 0.02 + 0.01,
+                     jnp.float32)
+    return dy, x, w, jnp.asarray(0.2), jnp.asarray(0.05), ws
+
+
+def _close_normed(a, b, tol=1e-5):
+    a = np.asarray(a, np.float64)
+    b = np.asarray(b, np.float64)
+    scale = max(np.max(np.abs(a)), 1.0)
+    assert_allclose(a / scale, b / scale, rtol=0, atol=tol)
+
+
+@pytest.mark.parametrize("k_side", [False, True])
+@pytest.mark.parametrize("round_cot", [True, False])
+def test_bwd_split_fallback_matches_combined(rng, k_side, round_cot):
+    """scratch_budget=0 forces the split dx/dw path; all five cotangents
+    must match the combined kernel (multi-block in every grid axis)."""
+    args = _bwd_operands(rng, 256, 1024, 256, k_side)
+    kw = dict(q_n_a=8, q_p_a=7, q_n_w=8, q_p_w=7, round_cot=round_cot,
+              interpret=True)
+    combined = qmm.quant_matmul_bwd(*args, **kw)
+    split = qmm.quant_matmul_bwd(*args, scratch_budget=0, **kw)
+    assert split[3].shape == args[2].shape
+    assert split[4].shape == ((1024, 1) if k_side else (1, 256))
+    for a, b in zip(combined, split):
+        _close_normed(a, b)
+
+
+def test_bwd_batched_split_fallback_matches_combined(rng):
+    e, m, k, n = 3, 128, 512, 128
+    dy = jnp.asarray(rng.standard_normal((e, m, n)), jnp.float32)
+    x = jnp.asarray(rng.standard_normal((e, m, k)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((e, k, n)) * 0.05, jnp.float32)
+    a_s = jnp.asarray(np.abs(rng.standard_normal((e, 1))) * 0.1 + 0.1,
+                      jnp.float32)
+    a_b = jnp.asarray(rng.standard_normal((e, 1)) * 0.01, jnp.float32)
+    ws = jnp.asarray(np.abs(rng.standard_normal((e, n))) * 0.02 + 0.01,
+                     jnp.float32)
+    kw = dict(q_n_a=8, q_p_a=7, q_n_w=8, q_p_w=7, interpret=True)
+    combined = qmm.quant_matmul_bwd_batched(dy, x, w, a_s, a_b, ws, **kw)
+    split = qmm.quant_matmul_bwd_batched(dy, x, w, a_s, a_b, ws,
+                                         scratch_budget=0, **kw)
+    for a, b in zip(combined, split):
+        assert a.shape == b.shape
+        _close_normed(a, b)
+
+
+def test_bwd_budget_routing():
+    """The dispatch boundary itself: QAT hot-path shapes stay on the combined
+    kernel; vocab-sized N (tied/untied lm_head) must NOT try to allocate the
+    (bk, Np) panel on real TPU."""
+    assert qmm.bwd_uses_combined(256, 1024, 512)
+    assert not qmm.bwd_uses_combined(256, 512, 50304)      # lm_head vocab
+    assert not qmm.bwd_uses_combined(256, 1024, 8192)      # very wide d_ff
+    assert not qmm.bwd_uses_combined(256, 1024, 512, scratch_budget=0)
+    assert qmm.bwd_scratch_bytes(256, 1024, 512) < qmm.BWD_SCRATCH_BUDGET_BYTES
+
+
+def test_huge_n_backward_runs_without_panel(rng):
+    """A vocab-sized N goes down the budget fallback end-to-end (the combined
+    kernel would allocate a (512, Np) f32 panel — ~100MB at real vocab)."""
+    m, k, n = 128, 512, qmm.DEFAULT_TILES[1] * 40  # Np panel > 8MB budget
+    assert not qmm.bwd_uses_combined(m, k, n)
+    args = _bwd_operands(rng, m, k, n, k_side=False)
+    dx, dsa, dba, dw, dws = qmm.quant_matmul_bwd(
+        *args, q_n_a=8, q_p_a=7, q_n_w=8, q_p_w=7, interpret=True)
+    assert dx.shape == (m, k) and dw.shape == (k, n) and dws.shape == (1, n)
+    assert np.isfinite(np.asarray(dsa)) and np.isfinite(np.asarray(dws)).all()
+
+
+# ---------------------------------------------------------------------------
 # int4 packing + serving
 # ---------------------------------------------------------------------------
 

@@ -7,6 +7,7 @@ and the final decode's argmax must be emitted, not thrown away.
 """
 import jax
 import jax.numpy as jnp
+import pytest
 
 from repro.launch.serve import greedy_generate
 
@@ -52,3 +53,14 @@ def test_zero_tokens():
     calls = []
     toks, _ = greedy_generate(_stub_decode(calls), None, {}, prompts, 0)
     assert calls == [0, 1, 2] and toks.shape == (2, 0)
+
+
+def test_empty_prompt_raises():
+    """With no prompt token there are no seed logits: the old loop crashed on
+    `logits[:, 0]` with logits=None — now a clear assertion up front."""
+    prompts = jnp.zeros((2, 0), jnp.int32)
+    with pytest.raises(AssertionError, match="prompt token"):
+        greedy_generate(_stub_decode([]), None, {}, prompts, 3)
+    # zero requested tokens with an empty prompt is still a no-op, not a crash
+    toks, _ = greedy_generate(_stub_decode([]), None, {}, prompts, 0)
+    assert toks.shape == (2, 0)
