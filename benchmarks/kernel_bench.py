@@ -30,8 +30,20 @@ from repro.core.quantizer import (QuantSpec, fake_quant, grad_scale,
 from repro.kernels import ops, ref
 from repro.kernels import quant_matmul as qmm
 from repro.launch import hlo_cost
+from repro.models import common as C
 
 M, K, N = 256, 1024, 512  # tile-multiple QAT hot-path shape
+
+
+def _embed_lookup_cases(rng, vocab=4096, d_model=1024, n_tokens=128):
+    """Matched int8-codes / packed-int4 serving embeddings + a token batch."""
+    from repro.core.policy import QuantConfig
+    codes = jnp.asarray(rng.integers(-8, 8, (vocab, d_model)), jnp.int8)
+    scale = jnp.asarray(0.02, jnp.float32)
+    toks = jnp.asarray(rng.integers(0, vocab, (2, n_tokens // 2)), jnp.int32)
+    eqcfg = QuantConfig(w_bits=4, a_bits=32, mode="mdq", edge_bits=4)
+    return ({"codes": codes, "w_scale": scale},
+            {"codes4": pack_int4(codes, 1), "w_scale": scale}, toks, eqcfg)
 
 
 def _bytes_of(fn, *args):
@@ -150,6 +162,16 @@ def run():
     t_int4 = _time(lambda: ops.int_matmul(x, packed, ws, wspec, packed=True,
                                           interpret=True))
 
+    # ---- serving embedding: gathered int8 rows vs nibble-packed rows -------
+    emb8, emb4, toks, eqcfg = _embed_lookup_cases(rng)
+    embed_bytes_int8 = _boundary_bytes(
+        lambda c, s, t: C.embed_lookup({"codes": c, "w_scale": s}, t, eqcfg),
+        emb8["codes"], emb8["w_scale"], toks)
+    embed_bytes_int4 = _boundary_bytes(
+        lambda c, s, t: C.embed_lookup({"codes4": c, "w_scale": s}, t, eqcfg),
+        emb4["codes4"], emb4["w_scale"], toks)
+    ev, ed = emb8["codes"].shape
+
     # ---- standalone kernels ------------------------------------------------
     wq = jnp.asarray(rng.standard_normal((4096, 1024)) * 0.1, jnp.float32)
     t_fq = _time(lambda: ops.fake_quant(wq, 0.05, wspec, interpret=True))
@@ -182,6 +204,21 @@ def run():
             "weight_traffic_reduction": (K * N) / (K * N // 2),
             "int8_interpret_us": t_int8,
             "int4_interpret_us": t_int4,
+        },
+        "embedding_pack": {
+            # ROADMAP item: the <=4-bit serving embedding table no longer
+            # costs 1 byte/element — rows are nibble-packed along d_model and
+            # unpacked in-register after the gather (models/common.py
+            # embed_lookup). Boundary bytes = resident table + tokens + out.
+            "vocab": ev, "d_model": ed, "tokens_gathered": int(toks.size),
+            "lookup_hbm_bytes_int8": embed_bytes_int8,
+            "lookup_hbm_bytes_int4": embed_bytes_int4,
+            "bytes_saved": embed_bytes_int8 - embed_bytes_int4,
+            "table_bytes_int8": ev * ed,
+            "table_bytes_int4": ev * ed // 2,
+            "gathered_row_bytes_int8": int(toks.size) * ed,
+            "gathered_row_bytes_int4": int(toks.size) * ed // 2,
+            "reduction": embed_bytes_int8 / embed_bytes_int4,
         },
         # legacy flat keys (benchmarks/run.py and older reports)
         "quant_matmul_unfused_us": t_fwd_unfused,
@@ -296,6 +333,21 @@ def main(argv=None):
         if combined >= split:
             print("FAIL: combined backward models MORE traffic than split")
             return 1
+        # packed-embedding gate: codes4 lookup must equal the int8-codes
+        # lookup bit-for-bit (same codes, same dequant) and halve the table
+        rng = np.random.default_rng(2)
+        emb8, emb4, toks, eqcfg = _embed_lookup_cases(rng, vocab=64,
+                                                      d_model=32, n_tokens=16)
+        y8 = C.embed_lookup(emb8, toks, eqcfg)
+        y4 = C.embed_lookup(emb4, toks, eqcfg)
+        if y8.dtype != y4.dtype or not bool(jnp.all(y8 == y4)):
+            print("FAIL: packed-int4 embedding lookup drifts from int8 codes")
+            return 1
+        if emb4["codes4"].size * 2 != emb8["codes"].size:
+            print("FAIL: packed embedding table is not half the bytes")
+            return 1
+        print(f"[embedding_pack] table {emb8['codes'].size:,} -> "
+              f"{emb4['codes4'].size:,} bytes (2.0x), lookup parity exact")
     else:
         r = run()
         r["equivalence"] = errs

@@ -186,8 +186,15 @@ def batch_pspecs(batch, mesh, extra_model_dp: bool = False):
     return jax.tree.map(one, batch)
 
 
-def cache_pspecs(cache, mesh):
-    """Decode-cache specs: batch -> data axes, KV sequence axis -> model."""
+def cache_pspecs(cache, mesh, *, shard_batch: bool = True):
+    """Decode-cache specs: batch -> data axes, KV sequence axis -> model.
+
+    shard_batch=False replicates the batch axis instead — the serving
+    engine's pooled cache wants this: slot rows are written one at a time by
+    dynamic-slice inserts (cache_slot_insert), which would otherwise bounce
+    a single shard's row through cross-device traffic on every recycle, and
+    the slot count need not divide the data axes.
+    """
     bt = batch_axes(mesh)
     sizes = _sizes(mesh)
     nb = 1
@@ -198,7 +205,7 @@ def cache_pspecs(cache, mesh):
         lead = (None,) if stacked else ()
         off = len(lead)
         entries = [None] * a.ndim
-        if a.ndim > off and a.shape[off] % nb == 0 and bt:
+        if shard_batch and a.ndim > off and a.shape[off] % nb == 0 and bt:
             entries[off] = bt
         if (seq_axis is not None and a.ndim > off + seq_axis
                 and _div(a.shape[off + seq_axis], mesh, "model")):

@@ -1,19 +1,27 @@
-"""Batched serving launcher: int-coded weights + quantized KV cache.
+"""Serving launcher: continuous-batching engine over int-coded weights.
 
     PYTHONPATH=src python -m repro.launch.serve --arch granite-8b --smoke \
         --batch 4 --new-tokens 8
 
-Sharded variant of examples/serve_quantized.py: mesh over available devices,
-params sharded with production rules, cache sequence-sharded on the model
-axis, greedy batched decode.
+Thin CLI over repro.serve.ServeEngine: params converted to serving int codes
+(nibble-packed at <=4 bits, embedding included) and sharded with the
+production rules; one pooled (optionally int8/int4) KV cache multiplexes all
+requests through slot recycling. `--smoke` reports prefill and decode
+tokens/sec SEPARATELY (a single number conflates prompt chunks with
+generated tokens).
+
+`greedy_generate` is the engine-free batched loop: ONE chunked-prefill step
+over the whole prompt, then new_tokens - 1 single-token decode steps — the
+serving engine's per-request outputs match it exactly (the parity contract
+tests/test_serve_engine.py pins).
 """
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.registry import ARCH_IDS, get_config, reduced_config
 from repro.core.policy import get_preset
@@ -22,38 +30,37 @@ from repro.dist import sharding as shard
 from repro.launch.mesh import make_host_mesh
 from repro.models import model as M
 from repro.models.common import convert_to_serving
+from repro.serve import (ModelExecutor, SamplingParams, Scheduler, ServeEngine)
 
 
-def greedy_generate(decode, params, cache, prompts, new_tokens: int):
-    """Greedy batched decode: exactly `new_tokens` emitted tokens from
-    `prompt_len + new_tokens - 1` decode steps.
+def greedy_generate(step, params, cache, prompts, new_tokens: int):
+    """Greedy batched generation via the chunked prefill path.
 
-    The first generated token is the argmax of the LAST prompt step's
-    logits, and the final decode's argmax is emitted rather than discarded
-    (the old loop ran one extra jit step per request whose result was
-    thrown away). Returns (tokens (batch, new_tokens), cache).
+    `step(params, cache, {"tokens": (B,C), "pos": (B,C)})` is a jitted
+    prefill_step. The prompt runs as ONE batched call (not prompt_len
+    single-token steps — the legacy loop survives only as a parity reference
+    in tests/test_serve_loop.py), then `new_tokens - 1` C=1 decode calls.
+    The first generated token is the argmax of the prefill's last-position
+    logits and the final decode's argmax is emitted, not discarded.
+    Returns (tokens (batch, new_tokens), cache).
     """
     batch, prompt_len = prompts.shape
     assert prompt_len >= 1 or new_tokens <= 0, (
         "greedy_generate needs at least one prompt token to seed generation "
         f"(got prompt_len={prompt_len}, new_tokens={new_tokens})")
-    logits = None
-    for t in range(prompt_len):
-        logits, cache = decode(params, cache,
-                               {"tokens": prompts[:, t:t + 1],
-                                "pos": jnp.full((batch,), t, jnp.int32)})
     if new_tokens <= 0:
         return jnp.zeros((batch, 0), jnp.int32), cache
-    tok = jnp.argmax(logits[:, 0], -1)[:, None]
+    pos = jnp.broadcast_to(jnp.arange(prompt_len, dtype=jnp.int32)[None],
+                           (batch, prompt_len))
+    logits, cache = step(params, cache, {"tokens": prompts, "pos": pos})
+    tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
     outs = []
     for i in range(new_tokens):
         outs.append(tok)
         if i + 1 < new_tokens:
-            logits, cache = decode(
-                params, cache,
-                {"tokens": tok,
-                 "pos": jnp.full((batch,), prompt_len + i, jnp.int32)})
-            tok = jnp.argmax(logits[:, 0], -1)[:, None]
+            pos = jnp.full((batch, 1), prompt_len + i, jnp.int32)
+            logits, cache = step(params, cache, {"tokens": tok, "pos": pos})
+            tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
     return jnp.concatenate(outs, 1), cache
 
 
@@ -62,9 +69,14 @@ def main():
     ap.add_argument("--arch", default="granite-8b", choices=ARCH_IDS)
     ap.add_argument("--quant", default="w8a8")
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=4,
+                    help="number of requests submitted")
+    ap.add_argument("--slots", type=int, default=0,
+                    help="KV pool slots (0 = min(batch, 4))")
     ap.add_argument("--prompt-len", type=int, default=16, dest="prompt_len")
     ap.add_argument("--new-tokens", type=int, default=8, dest="new_tokens")
+    ap.add_argument("--chunk", type=int, default=8,
+                    help="prefill chunk width (tokens per prefill step)")
     ap.add_argument("--kv-bits", type=int, default=8, dest="kv_bits")
     ap.add_argument("--model-parallel", type=int, default=1, dest="mp")
     args = ap.parse_args()
@@ -80,25 +92,35 @@ def main():
     p_sh = shard.named_tree(shard.param_pspecs(params, mesh), mesh)
     params = jax.device_put(params, p_sh)
 
-    total = args.prompt_len + args.new_tokens
-    cache = M.init_cache(cfg, qcfg, args.batch, total)
-    c_sh = shard.named_tree(shard.cache_pspecs(cache, mesh), mesh)
-    cache = jax.device_put(cache, c_sh)
+    # the pool's slot axis stays unsharded (per-slot dynamic-slice inserts);
+    # the KV sequence axis still shards over the model axis
+    def shard_caches(cache):
+        specs = shard.cache_pspecs(cache, mesh, shard_batch=False)
+        return jax.device_put(cache, shard.named_tree(specs, mesh))
 
-    decode = jax.jit(lambda p, c, b: M.decode_step(p, c, b, cfg, qcfg),
-                     donate_argnums=1)
-    prompts = sample_batch(cfg, DataConfig(), 0, args.batch,
-                           args.prompt_len)["tokens"]
+    max_len = args.prompt_len + args.new_tokens
+    n_slots = args.slots or min(args.batch, 4)
+    executor = ModelExecutor(params, cfg, qcfg, n_slots=n_slots,
+                             max_len=max_len, chunk=args.chunk,
+                             shard_caches=shard_caches)
+    engine = ServeEngine(executor, Scheduler(max_len=max_len,
+                                             max_queue=args.batch))
+    prompts = np.asarray(sample_batch(cfg, DataConfig(), 0, args.batch,
+                                      args.prompt_len)["tokens"])
+    for i in range(args.batch):
+        ok, reason = engine.submit(prompts[i],
+                                   SamplingParams(max_new_tokens=args.new_tokens),
+                                   rid=f"req-{i}")
+        assert ok, reason
+    summary = engine.run_until_idle()
 
-    t0 = time.monotonic()
-    out_toks, cache = greedy_generate(decode, params, cache, prompts,
-                                      args.new_tokens)
-    jax.block_until_ready(out_toks)
-    dt = time.monotonic() - t0
-    steps = args.prompt_len + max(args.new_tokens - 1, 0)
+    tp = summary["throughput"]
     print(f"arch={cfg.name} mesh={dict(mesh.shape)} int{args.kv_bits}-KV "
-          f"batch={args.batch}: {args.batch * steps / dt:.0f} tok/s")
-    print("sample:", out_toks[0].tolist())
+          f"slots={n_slots} requests={args.batch}: "
+          f"prefill {tp['prefill_tok_s']:.0f} tok/s, "
+          f"decode {tp['decode_tok_s']:.0f} tok/s "
+          f"(occupancy {summary['occupancy']['mean']:.2f})")
+    print("sample:", engine.results["req-0"].tokens)
 
 
 if __name__ == "__main__":

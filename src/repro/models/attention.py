@@ -157,29 +157,51 @@ def _quantize_kv(x: jax.Array, spec) -> tuple[jax.Array, jax.Array]:
     return codes.astype(jnp.int8), scale
 
 
+def cache_append_chunk(cache: KVCache, k_new: jax.Array, v_new: jax.Array,
+                       pos: jax.Array, qcfg: QuantConfig, *,
+                       ring: bool = False, window: int = 0) -> KVCache:
+    """Write a chunk of tokens per batch row (ring-buffered for local attn).
+
+    k_new/v_new: (B, C, Hkv, D); pos: (B, C) absolute positions. Entries with
+    pos < 0 (padding rows of a partial prefill chunk, or inactive serving
+    slots) are dropped — no cache row is touched for them. Ring rows keep
+    only the last T chunk positions; earlier ones would be overwritten by
+    the ring anyway, and dropping them keeps the scatter free of duplicate
+    slot indices.
+    """
+    spec = kv_cache_spec(qcfg)
+    t = cache.k.shape[1]
+    if ring:
+        keep = (pos >= 0) & (pos > jnp.max(pos, axis=1, keepdims=True) - t)
+        slot = jnp.where(keep, pos % t, t)  # t is out of bounds -> dropped
+    else:
+        slot = jnp.where(pos >= 0, pos, t)
+    bidx = jnp.arange(k_new.shape[0])[:, None]
+    new_pos = cache.pos.at[bidx, slot].set(pos, mode="drop")
+    if spec is None:
+        k = cache.k.at[bidx, slot].set(k_new.astype(cache.k.dtype), mode="drop")
+        v = cache.v.at[bidx, slot].set(v_new.astype(cache.v.dtype), mode="drop")
+        return KVCache(k, v, None, None, new_pos)
+    kc, ks = _quantize_kv(k_new, spec)
+    vc, vs = _quantize_kv(v_new, spec)
+    return KVCache(
+        cache.k.at[bidx, slot].set(kc, mode="drop"),
+        cache.v.at[bidx, slot].set(vc, mode="drop"),
+        cache.k_scale.at[bidx, slot].set(ks, mode="drop"),
+        cache.v_scale.at[bidx, slot].set(vs, mode="drop"),
+        new_pos,
+    )
+
+
 def cache_append(cache: KVCache, k_new: jax.Array, v_new: jax.Array,
                  pos: jax.Array, qcfg: QuantConfig, *,
                  ring: bool = False, window: int = 0) -> KVCache:
-    """Write one token per batch row at `pos` (ring-buffered for local attn).
+    """Write one token per batch row at `pos` (C=1 cache_append_chunk).
 
     k_new/v_new: (B, 1, Hkv, D); pos: (B,) absolute positions.
     """
-    spec = kv_cache_spec(qcfg)
-    slot = pos % cache.k.shape[1] if ring else pos
-    bidx = jnp.arange(k_new.shape[0])
-    if spec is None:
-        k = cache.k.at[bidx, slot].set(k_new[:, 0].astype(cache.k.dtype))
-        v = cache.v.at[bidx, slot].set(v_new[:, 0].astype(cache.v.dtype))
-        return KVCache(k, v, None, None, cache.pos.at[bidx, slot].set(pos))
-    kc, ks = _quantize_kv(k_new[:, 0], spec)
-    vc, vs = _quantize_kv(v_new[:, 0], spec)
-    return KVCache(
-        cache.k.at[bidx, slot].set(kc),
-        cache.v.at[bidx, slot].set(vc),
-        cache.k_scale.at[bidx, slot].set(ks),
-        cache.v_scale.at[bidx, slot].set(vs),
-        cache.pos.at[bidx, slot].set(pos),
-    )
+    return cache_append_chunk(cache, k_new, v_new, pos[:, None], qcfg,
+                              ring=ring, window=window)
 
 
 def cache_kv(cache: KVCache, qcfg: QuantConfig, cdtype=jnp.bfloat16):
@@ -192,10 +214,63 @@ def cache_kv(cache: KVCache, qcfg: QuantConfig, cdtype=jnp.bfloat16):
     return k, v
 
 
+def storage_roundtrip(x: jax.Array, qcfg: QuantConfig, store_dtype,
+                      cdtype) -> jax.Array:
+    """Pass fresh K/V through the cache's storage semantics.
+
+    A token written by cache_append and read back by cache_kv goes through
+    int quantize -> dequantize (or a cast to the cache's storage dtype for
+    the fp cache). Chunked prefill attends to in-chunk K/V *before* they
+    reach the cache, so they must take the same roundtrip for a chunked
+    prefill step to be numerically identical to append-then-attend
+    single-token decode.
+    """
+    spec = kv_cache_spec(qcfg)
+    if spec is None:
+        return x.astype(store_dtype).astype(cdtype)
+    codes, scale = _quantize_kv(x, spec)
+    return (codes.astype(jnp.float32) * scale).astype(cdtype)
+
+
+def attend_chunk(q: jax.Array, k_new: jax.Array, v_new: jax.Array,
+                 cache: KVCache, qcfg: QuantConfig, *, q_per_kv: int,
+                 pos: jax.Array, window: int, softcap: float) -> jax.Array:
+    """Chunk attention against cache ∪ current chunk (pre-append).
+
+    q: (B, C, H, D); k_new/v_new: (B, C, Hkv, D) un-repeated, un-cached;
+    pos: (B, C) absolute positions of the chunk tokens (-1 = padding: the
+    query sees nothing and its K/V are invisible to every other query).
+    Valid keys per query: position in [max(0, p-window+1) .. p] (window=0
+    => everything up to p), taken from cache.pos for cached slots and from
+    `pos` itself for in-chunk keys — within-chunk causality falls out of the
+    same comparison. C=1 with the token appended afterwards reproduces the
+    classic decode step.
+    """
+    b, c, h, d = q.shape
+    k_old, v_old = cache_kv(cache, qcfg, q.dtype)
+    k_all = jnp.concatenate(
+        [k_old, storage_roundtrip(k_new, qcfg, cache.k.dtype, q.dtype)], axis=1)
+    v_all = jnp.concatenate(
+        [v_old, storage_roundtrip(v_new, qcfg, cache.v.dtype, q.dtype)], axis=1)
+    k_all = repeat_kv(k_all, q_per_kv)
+    v_all = repeat_kv(v_all, q_per_kv)
+    kpos = jnp.concatenate([cache.pos, pos], axis=1)  # (B, T + C)
+    s = jnp.einsum("bqhd,bthd->bhqt",
+                   (q.astype(jnp.float32) * d ** -0.5).astype(q.dtype), k_all,
+                   preferred_element_type=jnp.float32)
+    s = _softcap(s, softcap)
+    valid = (kpos[:, None, :] >= 0) & (kpos[:, None, :] <= pos[:, :, None])
+    if window > 0:
+        valid &= kpos[:, None, :] > (pos[:, :, None] - window)
+    s = jnp.where(valid[:, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqt,bthd->bqhd", p.astype(v_all.dtype), v_all)
+
+
 def attend_decode(q: jax.Array, cache: KVCache, qcfg: QuantConfig, *,
                   q_per_kv: int, pos: jax.Array, window: int,
                   softcap: float) -> jax.Array:
-    """One-token attention against the cache.
+    """One-token attention against the cache (token already appended).
 
     q: (B, 1, H, D); pos: (B,) current absolute positions.
     Valid slots: cache.pos in [max(0, pos-window+1) .. pos] (window=0 => all

@@ -78,8 +78,12 @@ FUSED_BATCHED_EQS = ("gecd,edf->gecf", "gecf,efd->gecd")
 
 # Int4 serving codes are nibble-packed along the matmul contraction axis,
 # counted from the END so the rule survives vmap-stacking (scan over layers).
+# The embedding is gathered, not contracted: it packs along d_model (-1) so
+# each vocab row stays a contiguous run of bytes and jnp.take fetches
+# 0.5 byte/element rows that dequantize in-register after the gather.
 _PACK_AXIS = dict.fromkeys(
     ("wq", "wk", "wv", "xq", "xk", "xv", "mq", "mk", "mv"), -3)
+_PACK_AXIS["embed"] = -1
 
 
 def pack_axis_of(name: str) -> int:
@@ -386,10 +390,12 @@ def convert_to_serving(params, qcfg: QuantConfig):
 
     Every quantized linear's latent f32 "w" is replaced by its int codes:
     1 byte/element in HBM at 5-8 bits ("codes"), and at <=4 bits two codes
-    nibble-packed per byte along the matmul contraction axis ("codes4",
-    0.5 byte/element — kernels/quant_matmul.int4_matmul unpacks tile-wise in
-    VMEM). Activation quantizer params are dropped (no STE at inference).
-    Non-quantized weights are cast to bf16.
+    nibble-packed per byte ("codes4", 0.5 byte/element) — along the matmul
+    contraction axis for linears (kernels/quant_matmul.int4_matmul unpacks
+    tile-wise in VMEM) and along d_model for the gathered embedding table
+    (embed_lookup unpacks the gathered rows in-register). Activation
+    quantizer params are dropped (no STE at inference). Non-quantized
+    weights are cast to bf16.
     """
     from repro.core.quantizer import quantize_int
 
@@ -406,8 +412,7 @@ def convert_to_serving(params, qcfg: QuantConfig):
                         sc = sc.reshape(sc.shape + (1,) * (w.ndim - sc.ndim))
                     codes = quantize_int(w, sc, spec)
                     ax = pack_axis_of(name)
-                    if (spec.bits <= 4 and name != "embed"
-                            and w.shape[ax] % 2 == 0):
+                    if spec.bits <= 4 and w.shape[ax] % 2 == 0:
                         new = {"codes4": pack_int4(codes, ax % w.ndim),
                                "w_scale": sc}
                     else:
@@ -442,6 +447,11 @@ def embed_init(key, qcfg: QuantConfig, vocab_padded: int, d_model: int) -> dict:
 
 def embed_lookup(p: dict, tokens: jax.Array, qcfg: QuantConfig,
                  cdtype=jnp.bfloat16) -> jax.Array:
+    if "codes4" in p:
+        # gather the packed (V, d/2) byte rows, then unpack + dequantize the
+        # gathered slice only — HBM reads stay 0.5 byte/element
+        rows = jnp.take(p["codes4"], tokens, axis=0)
+        return unpack_int4(rows, -1).astype(cdtype) * p["w_scale"].astype(cdtype)
     if "codes" in p:
         rows = jnp.take(p["codes"], tokens, axis=0).astype(cdtype)
         return rows * p["w_scale"].astype(cdtype)

@@ -11,6 +11,8 @@ Entry points:
   forward(params, batch, cfg, qcfg, ...)            -> logits [, cache]
   init_cache(cfg, qcfg, batch, cache_len)           -> decode cache pytree
   decode_step(params, cache, batch, cfg, qcfg, ...) -> (logits, cache)
+  prefill_step(params, cache, batch, cfg, qcfg, ..) -> (logits, cache)  [C>=1]
+  cache_slot_insert / cache_slot_reset              -> serving slot pool ops
   quant_leaves(params, qcfg)                        -> [(w, scale, spec)]
 """
 from __future__ import annotations
@@ -380,7 +382,14 @@ def init_cache(cfg: ArchConfig, qcfg: QuantConfig, batch: int,
 def block_decode(p: dict, x: jax.Array, bd: BlockDef, cfg: ArchConfig,
                  qcfg: QuantConfig, cache: dict, pos: jax.Array,
                  frontend_embeds, cdtype, constrain: Constrain):
-    """Single-token step. x: (B,1,d); pos: (B,). Returns (x, new_cache)."""
+    """Chunk step against the cache. x: (B,C,d); pos: (B,C) (C=1: decode).
+
+    Returns (x, new_cache). pos entries of -1 mark padding (partial prefill
+    chunks / inactive serving slots): their K/V never reach the cache and
+    they attend to nothing. Recurrent blocks consume every chunk token
+    unconditionally, so padded chunks are only valid for attention blocks
+    (the serving engine enforces this).
+    """
     new_cache = dict(cache)
     if bd.attn == "mlstm":
         x, st = rec.mlstm_block(p, x, cfg, qcfg, cdtype, state=cache["mlstm"])
@@ -397,14 +406,15 @@ def block_decode(p: dict, x: jax.Array, bd: BlockDef, cfg: ArchConfig,
         k = qlinear(p["wk"], xn, "wk", qcfg, "bsd,dhk->bshk", cdtype)
         v = qlinear(p["wv"], xn, "wv", qcfg, "bsd,dhk->bshk", cdtype)
         if cfg.pos == "rope":
-            q = attn.rope_apply(q, pos[:, None], cfg.rope_theta)
-            k = attn.rope_apply(k, pos[:, None], cfg.rope_theta)
-        kvc = attn.cache_append(cache["kv"], k, v, pos, qcfg,
-                                ring=(bd.attn == "local"), window=cfg.window)
-        new_cache["kv"] = kvc
-        o = attn.attend_decode(q, kvc, qcfg, q_per_kv=cfg.q_per_kv, pos=pos,
-                               window=cfg.window if bd.attn == "local" else 0,
-                               softcap=cfg.attn_softcap)
+            q = attn.rope_apply(q, pos, cfg.rope_theta)
+            k = attn.rope_apply(k, pos, cfg.rope_theta)
+        o = attn.attend_chunk(q, k, v, cache["kv"], qcfg,
+                              q_per_kv=cfg.q_per_kv, pos=pos,
+                              window=cfg.window if bd.attn == "local" else 0,
+                              softcap=cfg.attn_softcap)
+        new_cache["kv"] = attn.cache_append_chunk(
+            cache["kv"], k, v, pos, qcfg, ring=(bd.attn == "local"),
+            window=cfg.window)
         out = qlinear(p["wo"], o, "wo", qcfg, "bshk,hkd->bsd", cdtype)
         if cfg.sandwich_norm:
             out = apply_norm(p["ln1_post"], out, cfg.norm)
@@ -420,13 +430,16 @@ def block_decode(p: dict, x: jax.Array, bd: BlockDef, cfg: ArchConfig,
     return x, new_cache
 
 
-def decode_step(params: dict, cache: dict, batch: dict, cfg: ArchConfig,
-                qcfg: QuantConfig, *, constrain: Constrain = _IDENT,
-                logits_constrain: Constrain = _IDENT):
-    """serve_step: one new token per sequence against the cache.
+def prefill_step(params: dict, cache: dict, batch: dict, cfg: ArchConfig,
+                 qcfg: QuantConfig, *, constrain: Constrain = _IDENT,
+                 logits_constrain: Constrain = _IDENT):
+    """Multi-token step against the cache (chunked prefill / decode).
 
-    batch: tokens (B,1) int32, pos (B,) int32 [+ frontend_embeds].
-    Returns (logits (B,1,V), new_cache).
+    batch: tokens (B,C) int32, pos (B,C) int32 [+ frontend_embeds]. pos=-1
+    marks padding tokens (see block_decode). Returns (logits (B,C,V),
+    new_cache). C=1 with pos (B,1) is exactly the classic decode step;
+    C=prompt_len against a fresh cache is a full prefill whose [:, -1]
+    logits seed generation.
     """
     cdtype = _cdtype(cfg)
     tokens, pos = batch["tokens"], batch["pos"]
@@ -436,7 +449,8 @@ def decode_step(params: dict, cache: dict, batch: dict, cfg: ArchConfig,
     if cfg.frontend == "audio_frames" and fe is not None:
         x = x + fe.astype(cdtype)
     if cfg.pos == "learned":
-        x = x + jnp.take(params["pos_embed"], pos, axis=0).astype(cdtype)[:, None]
+        x = x + jnp.take(params["pos_embed"], jnp.maximum(pos, 0),
+                         axis=0).astype(cdtype)
     x = constrain(x)
 
     new_cache = {"groups": (), "tail": ()}
@@ -462,6 +476,52 @@ def decode_step(params: dict, cache: dict, batch: dict, cfg: ArchConfig,
         final_softcap=cfg.final_softcap,
         tied_embed=params["embed"] if cfg.tie_embeddings else None)
     return logits_constrain(logits), new_cache
+
+
+def decode_step(params: dict, cache: dict, batch: dict, cfg: ArchConfig,
+                qcfg: QuantConfig, *, constrain: Constrain = _IDENT,
+                logits_constrain: Constrain = _IDENT):
+    """serve_step: one new token per sequence against the cache.
+
+    batch: tokens (B,1) int32, pos (B,) int32 [+ frontend_embeds].
+    Returns (logits (B,1,V), new_cache). Thin C=1 wrapper of prefill_step.
+    """
+    b2 = dict(batch)
+    if b2["pos"].ndim == 1:
+        b2["pos"] = b2["pos"][:, None]
+    return prefill_step(params, cache, b2, cfg, qcfg, constrain=constrain,
+                        logits_constrain=logits_constrain)
+
+
+# ===========================================================================
+# Serving slot pool (continuous batching): per-slot cache insert / reset
+# ===========================================================================
+
+def cache_slot_insert(pool: dict, row: dict, slot) -> dict:
+    """Write batch row 0 of `row` (a batch-1 cache tree) into batch row
+    `slot` of `pool`. Both trees come from init_cache (same cfg/qcfg and
+    cache length); "groups" leaves carry a leading stacked scan axis, so
+    their batch axis is axis 1. `slot` may be a traced int32 — the op jits
+    to a per-row dynamic-update-slice.
+    """
+    def ins_g(p, s):
+        return p.at[:, slot].set(s[:, 0].astype(p.dtype))
+
+    def ins_t(p, s):
+        return p.at[slot].set(s[0].astype(p.dtype))
+
+    return {"groups": jax.tree.map(ins_g, pool["groups"], row["groups"]),
+            "tail": jax.tree.map(ins_t, pool["tail"], row["tail"])}
+
+
+def cache_slot_reset(pool: dict, template: dict, slot) -> dict:
+    """Recycle one slot: restore its cache row to the freshly-initialized
+    state (KV pos rows back to -1 — attend_* masks them — and recurrent
+    states back to their init values, which are not all zero: sLSTM's m
+    starts at -1e9). `template` is a batch-1 init_cache(...) tree kept
+    around by the caller; stale K/V codes are left in place, masked by pos.
+    """
+    return cache_slot_insert(pool, template, slot)
 
 
 # ===========================================================================

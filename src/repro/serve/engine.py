@@ -1,0 +1,275 @@
+"""Continuous-batching serving engine over the chunked decode machinery.
+
+One preallocated pool `KVCache` of `n_slots` batch rows serves every
+request: a slot is claimed at admission, its prompt is prefilled chunk-by-
+chunk in a batch-1 scratch cache (so long prompts never stall in-flight
+decodes for more than one chunk), the scratch row is scattered into the pool
+(`cache_slot_insert`), and decode steps run the WHOLE pool each iteration —
+idle rows carry pos=-1, which `attend_chunk`/`cache_append_chunk` mask, so
+near-full batches are free. On completion the slot's cache row is reset from
+a pristine batch-1 template (`cache_slot_reset`: pos rows back to -1) and
+immediately refillable mid-flight.
+
+Determinism contract: per-batch-row independence of every decode op (learned
+per-tensor activation scales, per-(row,token,head) KV quantization) plus
+(seed, token_index)-keyed sampling means each request's output stream equals
+its single-request run bit-for-bit, REGARDLESS of arrival interleaving —
+pinned by tests/test_serve_engine.py.
+
+The engine is executor-agnostic: `ModelExecutor` drives the real jitted
+model; `simulate.SimExecutor` substitutes a cost-modeled fake with an
+injectable clock for the deterministic load benchmark.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.serve.metrics import MetricsCollector
+from repro.serve.sampling import SamplingParams, is_finished, sample_token
+from repro.serve.scheduler import Request, Scheduler
+
+PREFILLING = "prefilling"
+GENERATING = "generating"
+
+
+@dataclasses.dataclass
+class GenResult:
+    rid: str
+    prompt_len: int
+    tokens: list
+    finish_reason: str
+
+
+@dataclasses.dataclass
+class _SlotState:
+    req: Request
+    state: str = PREFILLING
+    cursor: int = 0          # prompt tokens already prefilled
+    out: list = dataclasses.field(default_factory=list)
+    last_logits: Optional[np.ndarray] = None
+
+
+class ModelExecutor:
+    """Jitted model driver: batch-1 scratch prefill + pooled decode.
+
+    Only attention-only patterns are served: recurrent blocks (mlstm/slstm/
+    rglru) consume every chunk token unconditionally, so pos=-1 padding rows
+    would corrupt their state mid-flight (model.block_decode documents the
+    contract). Cross-attention needs per-slot frontend embeds — also out.
+    """
+
+    def __init__(self, params, cfg, qcfg, *, n_slots: int, max_len: int,
+                 chunk: int = 16, shard_caches: Optional[Callable] = None):
+        from repro.models import model as M
+        bad = [bd.attn for bd in cfg.pattern
+               if bd.attn not in ("global", "local")]
+        if bad or any(bd.cross_attn for bd in cfg.pattern):
+            raise ValueError(
+                "ModelExecutor serves attention-only patterns (pos=-1 chunk "
+                f"padding is undefined for recurrent/cross blocks): {cfg.name}")
+        self.params = params
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.chunk = chunk
+        self.vocab = cfg.vocab_size
+        self.eos_id = None
+        # template stays pristine (slot resets re-insert it); scratch starts
+        # as an alias of it — jax arrays are immutable, prefill rebinds it.
+        self.template = M.init_cache(cfg, qcfg, 1, max_len)
+        self.scratch = self.template
+        self.pool = M.init_cache(cfg, qcfg, n_slots, max_len)
+        if shard_caches is not None:
+            self.template = shard_caches(self.template)
+            self.scratch = self.template
+            self.pool = shard_caches(self.pool)
+
+        import jax
+
+        # No donate_argnums: scratch aliases the template between resets, and
+        # donation would invalidate the template's buffers under it.
+        self._prefill = jax.jit(
+            lambda p, c, t, pos: M.prefill_step(p, c, {"tokens": t,
+                                                       "pos": pos}, cfg, qcfg))
+        self._decode = jax.jit(
+            lambda p, c, t, pos: M.decode_step(p, c, {"tokens": t,
+                                                      "pos": pos}, cfg, qcfg))
+        self._insert = jax.jit(M.cache_slot_insert)
+
+    def scratch_reset(self) -> None:
+        self.scratch = self.template
+
+    def prefill_chunk(self, tokens: np.ndarray, start_pos: int) -> np.ndarray:
+        """Run one prompt chunk (<= self.chunk tokens) through the scratch
+        cache; returns the (V,) f32 logits of the chunk's LAST token. The
+        chunk is padded to the fixed chunk width with pos=-1 rows so every
+        call hits one jit specialization."""
+        import jax.numpy as jnp
+        n = int(tokens.shape[0])
+        assert 1 <= n <= self.chunk
+        tk = np.zeros((1, self.chunk), np.int32)
+        ps = np.full((1, self.chunk), -1, np.int32)
+        tk[0, :n] = tokens
+        ps[0, :n] = np.arange(start_pos, start_pos + n)
+        logits, self.scratch = self._prefill(self.params, self.scratch,
+                                             jnp.asarray(tk), jnp.asarray(ps))
+        return np.asarray(logits[0, n - 1], np.float32)
+
+    def commit_prefill(self, slot: int) -> None:
+        self.pool = self._insert(self.pool, self.scratch, slot)
+
+    def decode(self, tokens: np.ndarray, pos: np.ndarray) -> np.ndarray:
+        """One pooled decode step. tokens (n_slots,), pos (n_slots,) with -1
+        marking idle rows; returns (n_slots, V) f32 logits (idle rows are
+        garbage — the engine never reads them)."""
+        import jax.numpy as jnp
+        logits, self.pool = self._decode(self.params, self.pool,
+                                         jnp.asarray(tokens[:, None]),
+                                         jnp.asarray(pos))
+        return np.asarray(logits[:, 0], np.float32)
+
+    def reset_slot(self, slot: int) -> None:
+        self.pool = self._insert(self.pool, self.template, slot)
+
+
+class ServeEngine:
+    """Slot-multiplexing request loop. One `step()` = (expire, admit, at most
+    one prefill chunk, one pooled decode). `run_until_idle()` drains."""
+
+    def __init__(self, executor, scheduler: Optional[Scheduler] = None,
+                 metrics: Optional[MetricsCollector] = None,
+                 clock: Callable[[], float] = time.monotonic):
+        self.executor = executor
+        self.n_slots = executor.n_slots
+        self.chunk = executor.chunk
+        # explicit None checks: Scheduler has __len__, so an EMPTY scheduler
+        # is falsy and `scheduler or default` would silently replace it
+        self.scheduler = (scheduler if scheduler is not None
+                          else Scheduler(max_len=executor.max_len))
+        self.metrics = metrics if metrics is not None else MetricsCollector()
+        self.clock = clock
+        self.slots: dict[int, _SlotState] = {}
+        self._free = set(range(self.n_slots))
+        self._pending_prefill: deque[int] = deque()
+        self._prefilling: Optional[int] = None
+        self._generating: set[int] = set()
+        self.results: dict[str, GenResult] = {}
+        self._auto_rid = 0
+
+    # -- submission ----------------------------------------------------------
+    def submit(self, tokens, sampling: Optional[SamplingParams] = None,
+               rid: Optional[str] = None) -> tuple[bool, str]:
+        """Enqueue one request. Returns the scheduler's (accepted, reason)."""
+        if rid is None:
+            rid = f"req-{self._auto_rid}"
+            self._auto_rid += 1
+        req = Request(rid, np.asarray(tokens, np.int32),
+                      sampling or SamplingParams())
+        now = self.clock()
+        ok, reason = self.scheduler.submit(req, now)
+        if ok:
+            self.metrics.on_submit(rid, int(req.tokens.shape[0]), now)
+        else:
+            self.metrics.on_reject(rid, reason, now)
+        return ok, reason
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.scheduler.queue or self.slots)
+
+    # -- one engine iteration ------------------------------------------------
+    def step(self) -> bool:
+        now = self.clock()
+        for req in self.scheduler.expire(now):
+            self.metrics.on_submit(req.rid, int(req.tokens.shape[0]),
+                                   req.arrival)
+            self.metrics.on_expire(req.rid, now)
+        did = False
+
+        # admission: fill free slots per the scheduler policy
+        free = sorted(self._free)
+        admits = self.scheduler.admit(now, len(free),
+                                      self.n_slots - len(free))
+        for req in admits:
+            slot = free.pop(0)
+            self._free.discard(slot)
+            self.slots[slot] = _SlotState(req=req)
+            self._pending_prefill.append(slot)
+            self.metrics.on_admit(req.rid, now)
+            did = True
+
+        # chunked prefill: one chunk of the oldest admitted prompt (batch-1
+        # scratch — one request prefills at a time, others wait their turn)
+        if self._prefilling is None and self._pending_prefill:
+            self._prefilling = self._pending_prefill.popleft()
+            self.executor.scratch_reset()
+        if self._prefilling is not None:
+            slot = self._prefilling
+            st = self.slots[slot]
+            prompt = st.req.tokens
+            n = min(self.chunk, prompt.shape[0] - st.cursor)
+            t0 = self.clock()
+            st.last_logits = self.executor.prefill_chunk(
+                prompt[st.cursor:st.cursor + n], st.cursor)
+            self.metrics.on_prefill_chunk(n, self.clock() - t0)
+            st.cursor += n
+            did = True
+            if st.cursor >= prompt.shape[0]:
+                self.executor.commit_prefill(slot)
+                self._prefilling = None
+                tnow = self.clock()
+                tok = sample_token(st.last_logits, st.req.sampling, 0)
+                st.out.append(tok)
+                self.metrics.on_token(st.req.rid, tnow)
+                reason = is_finished(st.out, st.req.sampling)
+                if reason:
+                    self._finish(slot, reason, tnow)
+                else:
+                    st.state = GENERATING
+                    self._generating.add(slot)
+
+        # pooled decode over every generating slot
+        gen = sorted(self._generating)
+        if gen:
+            tokens = np.zeros((self.n_slots,), np.int32)
+            pos = np.full((self.n_slots,), -1, np.int32)
+            for s in gen:
+                st = self.slots[s]
+                tokens[s] = st.out[-1]
+                # the token being fed sits at prompt_len + generated - 1
+                pos[s] = st.req.tokens.shape[0] + len(st.out) - 1
+            t0 = self.clock()
+            logits = self.executor.decode(tokens, pos)
+            self.metrics.on_decode_step(len(gen), self.n_slots,
+                                        self.clock() - t0)
+            tnow = self.clock()
+            for s in gen:
+                st = self.slots[s]
+                tok = sample_token(logits[s], st.req.sampling, len(st.out))
+                st.out.append(tok)
+                self.metrics.on_token(st.req.rid, tnow)
+                reason = is_finished(st.out, st.req.sampling)
+                if reason:
+                    self._finish(s, reason, tnow)
+            did = True
+        return did
+
+    def _finish(self, slot: int, reason: str, now: float) -> None:
+        st = self.slots.pop(slot)
+        self.metrics.on_finish(st.req.rid, reason, now)
+        self.results[st.req.rid] = GenResult(
+            st.req.rid, int(st.req.tokens.shape[0]), list(st.out), reason)
+        self.executor.reset_slot(slot)
+        self._generating.discard(slot)
+        self._free.add(slot)
+
+    def run_until_idle(self, max_steps: int = 1_000_000) -> dict:
+        """Drain queue + slots; returns the metrics summary."""
+        for _ in range(max_steps):
+            if not self.step() and not self.has_work:
+                break
+        return self.metrics.summary()

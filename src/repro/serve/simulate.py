@@ -1,0 +1,97 @@
+"""Deterministic serving simulation: injectable clock + cost-modeled executor.
+
+Mirrors the StragglerWatch pattern (train/fault_tolerance.py): the engine
+takes `clock=SimClock().now`, the SimExecutor advances that clock by a fixed
+step-cost model, and a seeded workload replays identically on every run — so
+the load benchmark's BENCH_serving.json and its CI smoke assertions are
+reproducible bit-for-bit with no real model or devices involved.
+
+The fake model emits one-hot logits with argmax (pos + 1) % vocab: each
+request's stream is its positions in order, so streams are strictly
+increasing (monotone) for any prompt shorter than vocab — an invariant the
+smoke gate checks — and depend only on the request itself, never on batch
+composition (same row-independence contract as the real model).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+class SimClock:
+    """Monotonic simulated time in seconds."""
+
+    def __init__(self, start: float = 0.0):
+        self._t = float(start)
+
+    def now(self) -> float:
+        return self._t
+
+    def advance(self, dt: float) -> None:
+        assert dt >= 0.0
+        self._t += float(dt)
+
+
+@dataclasses.dataclass(frozen=True)
+class SimCost:
+    """Step-cost model (seconds). Defaults are loosely TPU-decode-shaped:
+    a fixed dispatch overhead plus a per-token term, with prefill cheaper
+    per token than decode (parallel over the chunk)."""
+    prefill_base: float = 2e-3
+    prefill_per_token: float = 1e-4
+    decode_base: float = 4e-3
+    decode_per_token: float = 2e-4
+    insert: float = 5e-4
+
+
+class SimExecutor:
+    """ServeEngine-compatible executor over the fake model + cost model."""
+
+    def __init__(self, clock: SimClock, *, n_slots: int, max_len: int,
+                 chunk: int = 16, vocab: int = 50_000,
+                 cost: SimCost = SimCost()):
+        self.clock = clock
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.chunk = chunk
+        self.vocab = vocab
+        self.cost = cost
+
+    def _one_hot(self, tok: int) -> np.ndarray:
+        z = np.zeros((self.vocab,), np.float32)
+        z[tok % self.vocab] = 1.0
+        return z
+
+    def scratch_reset(self) -> None:
+        pass
+
+    def prefill_chunk(self, tokens: np.ndarray, start_pos: int) -> np.ndarray:
+        n = int(tokens.shape[0])
+        self.clock.advance(self.cost.prefill_base
+                           + self.cost.prefill_per_token * n)
+        last_pos = start_pos + n - 1
+        return self._one_hot(last_pos + 1)
+
+    def commit_prefill(self, slot: int) -> None:
+        self.clock.advance(self.cost.insert)
+
+    def decode(self, tokens: np.ndarray, pos: np.ndarray) -> np.ndarray:
+        n_active = int(np.sum(pos >= 0))
+        self.clock.advance(self.cost.decode_base
+                           + self.cost.decode_per_token * n_active)
+        out = np.zeros((self.n_slots, self.vocab), np.float32)
+        for s in range(self.n_slots):
+            if pos[s] >= 0:
+                out[s] = self._one_hot(int(pos[s]) + 1)
+        return out
+
+    def reset_slot(self, slot: int) -> None:
+        self.clock.advance(self.cost.insert)
+
+
+def poisson_arrivals(rng: np.random.Generator, n: int,
+                     rate: float) -> np.ndarray:
+    """n cumulative arrival times at `rate` requests/second (seeded)."""
+    gaps = rng.exponential(1.0 / rate, size=n)
+    return np.cumsum(gaps)

@@ -1,0 +1,91 @@
+"""Nibble-packed serving embedding (edge_bits <= 4).
+
+convert_to_serving packs the embedding table two codes per byte ALONG
+d_model (axis -1, unlike linears which pack the contraction axis), so a
+token gather fetches contiguous 0.5 byte/element rows and embed_lookup
+dequantizes only the gathered slice. Parity is exact against the unpacked
+int-code path and the QAT fake-quant path; odd d_model falls back to byte
+codes; quantized_weight unpacks codes4 for the tied lm_head.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.policy import QuantConfig, weight_spec
+from repro.core.quantizer import pack_int4, quantize_int, unpack_int4
+from repro.models import common as C
+
+VOCAB, D = 64, 32
+
+
+def _qcfg(edge_bits):
+    return QuantConfig(w_bits=4, a_bits=32, mode="mdq", edge_bits=edge_bits)
+
+
+def _embed(qcfg, d=D, seed=0):
+    return C.embed_init(jax.random.PRNGKey(seed), qcfg, VOCAB, d)
+
+
+def _toks():
+    return jnp.asarray(np.random.default_rng(3).integers(0, VOCAB, (2, 9)),
+                       jnp.int32)
+
+
+def test_serving_embed_packs_nibbles_at_edge4():
+    qcfg = _qcfg(4)
+    p = _embed(qcfg)
+    sp = C.convert_to_serving({"embed": p}, qcfg)["embed"]
+    assert set(sp) == {"codes4", "w_scale"}
+    assert sp["codes4"].shape == (VOCAB, D // 2)
+    assert sp["codes4"].dtype == jnp.int8
+
+    # exact parity against the unpacked int-code lookup
+    spec = weight_spec(qcfg, "embed")
+    codes = quantize_int(p["w"], p["w_scale"], spec)
+    ref = C.embed_lookup({"codes": codes, "w_scale": p["w_scale"]}, _toks(),
+                         qcfg, jnp.float32)
+    got = C.embed_lookup(sp, _toks(), qcfg, jnp.float32)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+    # ... and against the QAT fake-quant path (codes * scale == fake_quant)
+    qat = C.embed_lookup(p, _toks(), qcfg, jnp.float32)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(qat))
+
+
+def test_edge8_keeps_byte_codes():
+    qcfg = _qcfg(8)  # default serving regime: int8 edges, no packing
+    sp = C.convert_to_serving({"embed": _embed(qcfg)}, qcfg)["embed"]
+    assert "codes" in sp and "codes4" not in sp
+    assert sp["codes"].shape == (VOCAB, D)
+
+
+def test_odd_d_model_falls_back_to_byte_codes():
+    qcfg = _qcfg(4)
+    sp = C.convert_to_serving({"embed": _embed(qcfg, d=33)}, qcfg)["embed"]
+    assert "codes" in sp and "codes4" not in sp
+
+
+def test_quantized_weight_unpacks_codes4():
+    """The tied lm_head reads the serving embedding through
+    quantized_weight — it must see the full (V, D) dequantized table."""
+    qcfg = _qcfg(4)
+    p = _embed(qcfg)
+    sp = C.convert_to_serving({"embed": p}, qcfg)["embed"]
+    w4 = C.quantized_weight(sp, "embed", qcfg)
+    spec = weight_spec(qcfg, "embed")
+    codes = quantize_int(p["w"], p["w_scale"], spec)
+    want = np.asarray(codes, np.float32) * float(p["w_scale"])
+    np.testing.assert_array_equal(np.asarray(w4), want)
+
+
+def test_pack_unpack_roundtrip_covers_full_int4_range():
+    rng = np.random.default_rng(0)
+    codes = jnp.asarray(rng.integers(-8, 8, (6, 10)), jnp.int8)
+    for ax in (0, 1, -1):
+        packed = pack_int4(codes, ax)
+        assert packed.shape[ax % 2] == codes.shape[ax % 2] // 2
+        np.testing.assert_array_equal(np.asarray(unpack_int4(packed, ax)),
+                                      np.asarray(codes))
+    with pytest.raises(ValueError, match="odd"):
+        pack_int4(jnp.zeros((3, 4), jnp.int8), 0)

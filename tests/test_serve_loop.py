@@ -1,9 +1,11 @@
-"""Decode-loop accounting for the serving launcher's greedy_generate.
+"""Step accounting for the serving launcher's batched greedy_generate.
 
-Regression for the off-by-one the old loop had: it ran a final decode whose
-argmax was discarded — one wasted jit step per request. Exactly
-`prompt_len + new_tokens - 1` decode steps must emit `new_tokens` tokens,
-and the final decode's argmax must be emitted, not thrown away.
+The prompt now runs as ONE chunked prefill call (tokens (B, prompt_len)),
+then `new_tokens - 1` single-token decode calls; the final decode's argmax
+is emitted, not discarded. The old token-by-token loop survives here ONLY as
+a parity reference: both paths must emit identical tokens on the same step
+function, which is what lets the engine's chunked prefill claim exactness
+against the legacy behavior.
 """
 import jax
 import jax.numpy as jnp
@@ -14,53 +16,84 @@ from repro.launch.serve import greedy_generate
 _V = 11
 
 
-def _stub_decode(calls):
-    """Deterministic stand-in for M.decode_step: argmax(logits at pos p)
-    is (p + 1) % _V, so the expected greedy sequence is computable."""
-    def decode(params, cache, b):
-        calls.append(int(b["pos"][0]))
-        logits = jax.nn.one_hot((b["pos"] + 1) % _V, _V,
-                                dtype=jnp.float32)[:, None, :]
+def _stub_step(calls):
+    """Deterministic stand-in for M.prefill_step: argmax of the logits at
+    position p is (p + 1) % _V, so the greedy stream is computable. Records
+    each call's (n_tokens, first_pos)."""
+    def step(params, cache, b):
+        calls.append((int(b["tokens"].shape[1]), int(b["pos"][0, 0])))
+        logits = jax.nn.one_hot((b["pos"] + 1) % _V, _V, dtype=jnp.float32)
         return logits, cache
-    return decode
+    return step
 
 
-def test_exact_decode_step_count_and_tokens():
+def _legacy_token_loop(step, prompts, new_tokens):
+    """The pre-engine reference loop: every prompt token fed one at a time.
+    Kept only to pin parity with the batched-prefill path."""
+    batch, prompt_len = prompts.shape
+    if new_tokens <= 0:
+        return jnp.zeros((batch, 0), jnp.int32)
+    logits = None
+    for p in range(prompt_len):
+        pos = jnp.full((batch, 1), p, jnp.int32)
+        logits, _ = step(None, {}, {"tokens": prompts[:, p:p + 1],
+                                    "pos": pos})
+    tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+    outs = [tok]
+    for i in range(new_tokens - 1):
+        pos = jnp.full((batch, 1), prompt_len + i, jnp.int32)
+        logits, _ = step(None, {}, {"tokens": tok, "pos": pos})
+        tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+        outs.append(tok)
+    return jnp.concatenate(outs, 1)
+
+
+def test_one_prefill_call_then_single_token_decodes():
     batch, prompt_len, new_tokens = 3, 5, 4
     prompts = jnp.zeros((batch, prompt_len), jnp.int32)
     calls = []
-    toks, _ = greedy_generate(_stub_decode(calls), None, {}, prompts,
+    toks, _ = greedy_generate(_stub_step(calls), None, {}, prompts,
                               new_tokens)
-    # prompt steps 0..4, then new_tokens-1 = 3 decode steps at pos 5,6,7:
-    # the last argmax is EMITTED (old loop ran pos 8 and discarded it).
-    assert calls == list(range(prompt_len + new_tokens - 1))
+    # one (prompt_len)-wide prefill, then new_tokens-1 decodes at 5, 6, 7;
+    # the final decode's argmax is EMITTED (the old loop discarded it)
+    assert calls == [(prompt_len, 0)] + [(1, prompt_len + i)
+                                         for i in range(new_tokens - 1)]
     assert toks.shape == (batch, new_tokens)
     want = [(prompt_len + i) % _V for i in range(new_tokens)]
     assert toks[0].tolist() == want
     assert toks[-1].tolist() == want
 
 
+def test_batched_prefill_matches_legacy_token_loop():
+    prompts = jnp.arange(8, dtype=jnp.int32).reshape(2, 4)
+    new_tokens = 5
+    batched, _ = greedy_generate(_stub_step([]), None, {}, prompts,
+                                 new_tokens)
+    legacy = _legacy_token_loop(_stub_step([]), prompts, new_tokens)
+    assert batched.tolist() == legacy.tolist()
+
+
 def test_single_token_needs_no_decode_after_prompt():
     prompts = jnp.zeros((2, 3), jnp.int32)
     calls = []
-    toks, _ = greedy_generate(_stub_decode(calls), None, {}, prompts, 1)
-    assert calls == [0, 1, 2]  # prompt only: token comes from its last logits
+    toks, _ = greedy_generate(_stub_step(calls), None, {}, prompts, 1)
+    assert calls == [(3, 0)]  # token comes from the prefill's last logits
     assert toks.shape == (2, 1) and int(toks[0, 0]) == 3 % _V
 
 
 def test_zero_tokens():
     prompts = jnp.zeros((2, 3), jnp.int32)
     calls = []
-    toks, _ = greedy_generate(_stub_decode(calls), None, {}, prompts, 0)
-    assert calls == [0, 1, 2] and toks.shape == (2, 0)
+    toks, _ = greedy_generate(_stub_step(calls), None, {}, prompts, 0)
+    assert calls == [] and toks.shape == (2, 0)
 
 
 def test_empty_prompt_raises():
-    """With no prompt token there are no seed logits: the old loop crashed on
-    `logits[:, 0]` with logits=None — now a clear assertion up front."""
+    """With no prompt token there are no seed logits — a clear assertion up
+    front instead of a shape error inside the prefill."""
     prompts = jnp.zeros((2, 0), jnp.int32)
     with pytest.raises(AssertionError, match="prompt token"):
-        greedy_generate(_stub_decode([]), None, {}, prompts, 3)
+        greedy_generate(_stub_step([]), None, {}, prompts, 3)
     # zero requested tokens with an empty prompt is still a no-op, not a crash
-    toks, _ = greedy_generate(_stub_decode([]), None, {}, prompts, 0)
+    toks, _ = greedy_generate(_stub_step([]), None, {}, prompts, 0)
     assert toks.shape == (2, 0)
