@@ -7,13 +7,18 @@ bytes from the compiled program's ENTRY boundary (hlo_cost.entry_boundary_
 bytes — inputs once + outputs once, the exact HBM traffic of a single-pass
 kernel). Covers the QAT forward, the custom_vjp backward (the COMBINED
 dX/dW kernel the vjp ships, modeled against the legacy split pair it
-replaced), and the serving int8/packed-int4 matmuls.
+replaced), the serving int8/packed-int4 matmuls, and the flash-decode
+attention kernel over the pooled quantized KV cache (unfused = dequantize
+the whole pool + dense softmax; fused = codes read as stored, one pass).
 
 `main()` emits BENCH_kernels.json next to the cwd for CI/report tooling and
 exits nonzero if the fused custom_vjp drifts from the unfused composition
-past tolerance (forward 1e-5, gradients 1e-4) — `--smoke` runs only that
-equivalence gate plus the traffic model (no timing loops) so tier-1 CI can
-afford it.
+past tolerance (forward 1e-5, gradients 1e-4), if fused decode attention
+drifts from the jnp fallback past 1e-5, or if its modeled pooled-step
+traffic reduction falls under the floors (2x int8, 4x packed int4) —
+`--smoke` runs only those gates plus the traffic model (no timing loops) so
+tier-1 CI can afford it. The full run additionally sweeps decode pool
+shapes into BENCH_kernels.json (nightly).
 """
 from __future__ import annotations
 
@@ -44,6 +49,78 @@ def _embed_lookup_cases(rng, vocab=4096, d_model=1024, n_tokens=128):
     eqcfg = QuantConfig(w_bits=4, a_bits=32, mode="mdq", edge_bits=4)
     return ({"codes": codes, "w_scale": scale},
             {"codes4": pack_int4(codes, 1), "w_scale": scale}, toks, eqcfg)
+
+
+# decode-attention pool shapes (n_slots, max_len): full run sweeps all,
+# the smoke gate uses the first; floors are min modeled HBM reduction
+_DECODE_POOLS = [(4, 512), (8, 1024), (8, 2048)]
+_DECODE_GATES = {8: 2.0, 4: 4.0}
+
+
+def _decode_attention_case(kv_bits, n_slots, ctx, hkv=4, q_per_kv=4, d=128):
+    """Modeled HBM bytes of ONE pooled decode step at serving shape: the jnp
+    fallback dequantizes the whole pool (all slots x max_len) and takes a
+    dense softmax; the flash-decode kernel reads the codes as stored (int8 /
+    nibble-packed int4) and keeps the online softmax in VMEM."""
+    from repro.core.policy import QuantConfig
+    from repro.kernels.decode_attention import pooled_decode_attention
+    from repro.models import attention as A
+    qcfg = QuantConfig(w_bits=8, a_bits=32, mode="mdq",
+                       kv_cache_bits=kv_bits, fused_attention="off")
+    h = hkv * q_per_kv
+    cache = A.init_kv_cache(qcfg, n_slots, ctx, hkv, d)
+    # every slot live at full context so the fallback can't fold masks away
+    cache = cache._replace(pos=jnp.broadcast_to(
+        jnp.arange(ctx, dtype=jnp.int32), (n_slots, ctx)))
+    q = jnp.zeros((n_slots, 1, h, d), jnp.float32)
+    pos = jnp.full((n_slots,), ctx - 1, jnp.int32)
+
+    def unfused(q, cache, pos):
+        return A.attend_decode(q, cache, qcfg, q_per_kv=q_per_kv, pos=pos,
+                               window=0, softcap=0.0)
+
+    def fused(q, cache, pos):
+        return pooled_decode_attention(q, cache.k, cache.v, cache.k_scale,
+                                       cache.v_scale, cache.pos,
+                                       pos[:, None], q_per_kv=q_per_kv,
+                                       window=0, softcap=0.0, interpret=True)
+
+    ub = _bytes_of(unfused, q, cache, pos)
+    fb = _boundary_bytes(fused, q, cache, pos)
+    return {"n_slots": n_slots, "max_len": ctx, "kv_bits": kv_bits,
+            "unfused_hbm_bytes": ub, "fused_hbm_bytes": fb,
+            "reduction": ub / fb}
+
+
+def _decode_parity():
+    """Fused-vs-fallback drift of attend_decode / attend_chunk (interpret
+    mode) across storage widths, windows, and GQA grouping. Returns
+    ({case: err}, ok) like check_equivalence; gate is TOL_FWD."""
+    from repro.core.policy import QuantConfig
+    from repro.models import attention as A
+    hkv, d, b, t, n = 2, 8, 2, 9, 7
+    errs, ok = {}, True
+    for kv_bits in (0, 8, 4):
+        off = QuantConfig(w_bits=8, a_bits=32, mode="mdq",
+                          kv_cache_bits=kv_bits, fused_attention="off")
+        on = off.replace(fused_attention="on")
+        kk, kv, kq = jax.random.split(jax.random.PRNGKey(kv_bits), 3)
+        k = jax.random.normal(kk, (b, n, hkv, d), jnp.float32)
+        v = jax.random.normal(kv, (b, n, hkv, d), jnp.float32)
+        cpos = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32), (b, n))
+        cache = A.cache_append_chunk(A.init_kv_cache(off, b, t, hkv, d),
+                                     k, v, cpos, off, ring=False, window=0)
+        q = jax.random.normal(kq, (b, 1, hkv * 4, d), jnp.float32)
+        pos = jnp.full((b,), n - 1, jnp.int32)
+        for window in (0, 4):
+            outs = [A.attend_decode(q, cache, qc, q_per_kv=4, pos=pos,
+                                    window=window, softcap=30.0)
+                    for qc in (off, on)]
+            e = float(np.max(np.abs(np.asarray(outs[0], np.float32)
+                                    - np.asarray(outs[1], np.float32))))
+            errs[f"int{kv_bits}.decode.w{window}"] = e
+            ok = ok and e <= TOL_FWD
+    return errs, ok
 
 
 def _bytes_of(fn, *args):
@@ -172,6 +249,10 @@ def run():
         emb4["codes4"], emb4["w_scale"], toks)
     ev, ed = emb8["codes"].shape
 
+    # ---- serving: flash-decode attention over the quantized pool -----------
+    decode_sweep = [_decode_attention_case(bits, ns, ctx)
+                    for ns, ctx in _DECODE_POOLS for bits in (8, 4)]
+
     # ---- standalone kernels ------------------------------------------------
     wq = jnp.asarray(rng.standard_normal((4096, 1024)) * 0.1, jnp.float32)
     t_fq = _time(lambda: ops.fake_quant(wq, 0.05, wspec, interpret=True))
@@ -219,6 +300,15 @@ def run():
             "gathered_row_bytes_int8": int(toks.size) * ed,
             "gathered_row_bytes_int4": int(toks.size) * ed // 2,
             "reduction": embed_bytes_int8 / embed_bytes_int4,
+        },
+        "decode_attention": {
+            # one pooled decode step (C=1): unfused = cache_kv dequantizes
+            # the full pool to f32 + dense softmax; fused = flash-decode
+            # kernel boundary (codes as stored + scales + q in, acc/m/l out)
+            "hkv": 4, "q_per_kv": 4, "head_dim": 128,
+            "reduction_floors": {f"int{b}": g
+                                 for b, g in _DECODE_GATES.items()},
+            "pool_sweep": decode_sweep,
         },
         # legacy flat keys (benchmarks/run.py and older reports)
         "quant_matmul_unfused_us": t_fwd_unfused,
@@ -305,6 +395,27 @@ def main(argv=None):
     for k, v in sorted(errs.items()):
         print(f"  {k:32s} {v:.2e}")
 
+    # decode-attention gates (both modes): fused-vs-fallback parity, then
+    # the modeled pooled-step traffic floors at the smoke pool shape
+    derrs, dok = _decode_parity()
+    print("[decode_attention parity]")
+    for k, v in sorted(derrs.items()):
+        print(f"  {k:32s} {v:.2e}")
+    if not dok:
+        print(f"FAIL: fused decode attention drifts past {TOL_FWD:g}")
+        return 1
+    ns, ctx = _DECODE_POOLS[0]
+    for bits, floor in sorted(_DECODE_GATES.items()):
+        case = _decode_attention_case(bits, ns, ctx)
+        print(f"[decode_attention] int{bits} pool {ns}x{ctx}: "
+              f"{case['unfused_hbm_bytes']:,} -> "
+              f"{case['fused_hbm_bytes']:,} bytes "
+              f"({case['reduction']:.1f}x, floor {floor:.0f}x)")
+        if case["reduction"] < floor:
+            print(f"FAIL: int{bits} decode-attention HBM reduction "
+                  f"{case['reduction']:.2f}x under the {floor:.0f}x floor")
+            return 1
+
     if args.smoke:
         dy = jnp.ones((M, N), jnp.float32)
         x = jnp.ones((M, K), jnp.float32)
@@ -355,11 +466,19 @@ def main(argv=None):
             print(f"[{sect}]")
             for k, v in r[sect].items():
                 print(f"  {k:32s} {v:,.1f}")
+        da = r["decode_attention"]["pool_sweep"]
+        print("[decode_attention pool sweep]")
+        for case in da:
+            print(f"  int{case['kv_bits']} {case['n_slots']}x"
+                  f"{case['max_len']:5d}: {case['reduction']:6.1f}x")
         print(f"# fused QAT fwd moves {r['qat_fwd']['reduction']:.1f}x fewer "
               f"HBM bytes, bwd {r['qat_bwd']['reduction']:.1f}x (combined "
               f"dX/dW kernel {r['qat_bwd']['split_vs_combined']:.2f}x less "
               f"than the split pair); packed int4 halves serving weight "
-              f"reads ({r['serving_int4']['weight_traffic_reduction']:.1f}x) "
+              f"reads ({r['serving_int4']['weight_traffic_reduction']:.1f}x); "
+              f"flash-decode cuts pooled-attention traffic "
+              f"{min(c['reduction'] for c in da):.0f}-"
+              f"{max(c['reduction'] for c in da):.0f}x "
               f"(structural, CPU-measured)")
         with open("BENCH_kernels.json", "w") as f:
             json.dump(r, f, indent=2, sort_keys=True)

@@ -60,6 +60,12 @@ class QuantConfig:
     #   "on":   force fused (interpret-mode Pallas on CPU — used by tests)
     #   "off":  force the unfused pure-jnp composition
     fused_matmul: str = "auto"
+    # Fused flash-decode attention over the pooled KV cache
+    # (kernels/decode_attention): routes attend_decode and the cached side
+    # of attend_chunk through a Pallas kernel that dequantizes int8/int4
+    # KV per tile in VMEM with in-kernel pos masks and online softmax.
+    # Same tristate as fused_matmul ("on" = interpret-mode on CPU).
+    fused_attention: str = "auto"
     # Sensitivity-analysis overrides (Tab. 1 / Tab. 9 harness):
     #   fp_kinds:   module kinds forced to full precision (leave-one-out)
     #   only_kinds: if set, ONLY these kinds are quantized (quantize-one-only)

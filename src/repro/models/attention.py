@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.policy import QuantConfig, kv_cache_spec
+from repro.core.quantizer import pack_int4, unpack_int4
 from repro.models.common import rope as rope_apply  # noqa: F401 (re-export)
 
 NEG_INF = -2.0e9  # mask value kept finite to avoid NaN in padded softmax rows
@@ -31,37 +32,84 @@ def _softcap(scores: jax.Array, cap: float) -> jax.Array:
 
 
 def repeat_kv(k: jax.Array, q_per_kv: int) -> jax.Array:
-    """(B, T, Hkv, D) -> (B, T, H, D)."""
+    """(B, T, Hkv, D) -> (B, T, H, D).
+
+    Kept only as a reference for the grouped-einsum parity test — the
+    attention paths express GQA with a (hkv, q_per_kv) grouped einsum and
+    never materialize the repeated K/V in HBM.
+    """
     if q_per_kv == 1:
         return k
     return jnp.repeat(k, q_per_kv, axis=2)
 
 
+def _use_fused_attention(qcfg: QuantConfig) -> bool:
+    """Mirror of common._use_fused for the decode-attention kernel."""
+    if qcfg.fused_attention == "on":
+        return True
+    if qcfg.fused_attention == "off":
+        return False
+    from repro.kernels.ops import on_tpu
+    return on_tpu()
+
+
+def _grouped_scores(q: jax.Array, k: jax.Array, q_per_kv: int) -> jax.Array:
+    """(B, C, H, D) x un-repeated (B, T, Hkv, D) -> (B, H, C, T) scores.
+
+    GQA without repeat_kv: queries regroup (free reshape) as
+    (B, C, Hkv, q_per_kv, D) and each kv head batches its q_per_kv query
+    heads in one einsum — per-(head, query) dots are identical to the old
+    repeat path, so results agree to <=2 ULP (exact where XLA batches the
+    dots the same way; pinned by tests/test_gqa_grouped.py).
+    """
+    b, c, h, d = q.shape
+    hkv = k.shape[2]
+    q5 = q.reshape(b, c, hkv, h // hkv, d)
+    s = jnp.einsum("bqhgd,bthd->bhgqt", q5, k,
+                   preferred_element_type=jnp.float32)
+    return s.reshape(b, h, c, k.shape[1])
+
+
+def _grouped_pv(p: jax.Array, v: jax.Array) -> jax.Array:
+    """(B, H, C, T) probs x un-repeated (B, T, Hkv, D) -> (B, C, H, D)."""
+    b, h, c, t = p.shape
+    hkv = v.shape[2]
+    p5 = p.reshape(b, hkv, h // hkv, c, t)
+    o = jnp.einsum("bhgqt,bthd->bqhgd", p5, v)
+    return o.reshape(b, c, h, v.shape[3])
+
+
 def attend_full(q: jax.Array, k: jax.Array, v: jax.Array, *,
                 causal: bool, window: int, softcap: float,
                 q_positions: jax.Array, k_positions: jax.Array,
-                chunk_q: int = 512) -> jax.Array:
+                chunk_q: int = 512, q_per_kv: int = 1) -> jax.Array:
     """Chunked softmax attention.
 
-    q: (B, Sq, H, D); k, v: (B, Sk, H, D) (kv already head-repeated).
+    q: (B, Sq, H, D); k, v: (B, Sk, Hkv, D) UN-repeated — GQA runs as a
+    grouped einsum over (hkv, q_per_kv) so no head-repeated copy of K/V is
+    materialized in HBM (bit-parity with the old repeat_kv path is pinned
+    by tests/test_gqa_grouped.py).
     q_positions: (Sq,), k_positions: (Sk,) absolute positions for masking.
     window > 0 limits attention to k_pos in (q_pos - window, q_pos].
     """
     b, sq, h, d = q.shape
+    hkv = h // q_per_kv
+    assert k.shape[2] == hkv, (q.shape, k.shape, q_per_kv)
     scale = d ** -0.5
     nq = max(1, min(chunk_q, sq))
     while sq % nq:
         nq //= 2
     n_chunks = sq // nq
 
-    qc = q.reshape(b, n_chunks, nq, h, d).transpose(1, 0, 3, 2, 4)  # (C,B,H,nq,D)
+    # (C, B, Hkv, g, nq, D): chunked queries, grouped per kv head
+    qc = q.reshape(b, n_chunks, nq, hkv, q_per_kv, d).transpose(1, 0, 3, 4, 2, 5)
     qp = q_positions.reshape(n_chunks, nq)
-    kt = k.transpose(0, 2, 3, 1)  # (B,H,D,Sk)
-    vt = v.transpose(0, 2, 1, 3)  # (B,H,Sk,D)
+    kt = k.transpose(0, 2, 3, 1)  # (B,Hkv,D,Sk)
+    vt = v.transpose(0, 2, 1, 3)  # (B,Hkv,Sk,D)
 
     def one_chunk(carry, inp):
-        qi, qpos = inp  # (B,H,nq,D), (nq,)
-        s = jnp.einsum("bhqd,bhdk->bhqk",
+        qi, qpos = inp  # (B,Hkv,g,nq,D), (nq,)
+        s = jnp.einsum("bhgqd,bhdk->bhgqk",
                        (qi.astype(jnp.float32) * scale).astype(qi.dtype), kt,
                        preferred_element_type=jnp.float32)
         s = _softcap(s, softcap)
@@ -70,27 +118,30 @@ def attend_full(q: jax.Array, k: jax.Array, v: jax.Array, *,
             mask &= k_positions[None, :] <= qpos[:, None]
         if window > 0:
             mask &= k_positions[None, :] > (qpos[:, None] - window)
-        s = jnp.where(mask[None, None], s, NEG_INF)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
         p = jax.nn.softmax(s, axis=-1)
-        o = jnp.einsum("bhqk,bhkd->bhqd", p.astype(v.dtype), vt)
+        o = jnp.einsum("bhgqk,bhkd->bhgqd", p.astype(v.dtype), vt)
         return carry, o
 
     _, out = jax.lax.scan(one_chunk, None, (qc, qp))
-    # (C,B,H,nq,D) -> (B, Sq, H, D)
-    out = out.transpose(1, 0, 3, 2, 4).reshape(b, sq, h, d)
+    # (C,B,Hkv,g,nq,D) -> (B, Sq, H, D)
+    out = out.transpose(1, 0, 4, 2, 3, 5).reshape(b, sq, h, d)
     return out
 
 
 def attend_local_chunked(q: jax.Array, k: jax.Array, v: jax.Array, *,
                          window: int, softcap: float,
-                         chunk_q: int = 512) -> jax.Array:
+                         chunk_q: int = 512, q_per_kv: int = 1) -> jax.Array:
     """Sliding-window causal attention with kv-span slicing.
 
     Prefill-only fast path: positions are 0..S-1 on both sides. Each query
     chunk attends to a [chunk_start - window, chunk_end) slice, so compute
-    and memory are O(S * (window + chunk)) instead of O(S^2).
+    and memory are O(S * (window + chunk)) instead of O(S^2). k/v arrive
+    UN-repeated (B, Sk, Hkv, D); GQA is a grouped einsum like attend_full.
     """
     b, s, h, d = q.shape
+    hkv = h // q_per_kv
+    assert k.shape[2] == hkv, (q.shape, k.shape, q_per_kv)
     scale = d ** -0.5
     nq = max(1, min(chunk_q, s))
     while s % nq:
@@ -98,30 +149,30 @@ def attend_local_chunked(q: jax.Array, k: jax.Array, v: jax.Array, *,
     n_chunks = s // nq
     span = min(s, window + nq)
 
-    qc = q.reshape(b, n_chunks, nq, h, d).transpose(1, 0, 3, 2, 4)
-    kp = k.transpose(0, 2, 1, 3)  # (B,H,Sk,D)
+    qc = q.reshape(b, n_chunks, nq, hkv, q_per_kv, d).transpose(1, 0, 3, 4, 2, 5)
+    kp = k.transpose(0, 2, 1, 3)  # (B,Hkv,Sk,D)
     vp = v.transpose(0, 2, 1, 3)
 
     def one_chunk(carry, ci):
-        qi = qc[ci]  # (B,H,nq,D) -- gathered via dynamic index on stacked qc
+        qi = qc[ci]  # (B,Hkv,g,nq,D) -- dynamic index on stacked qc
         start = jnp.maximum(ci * nq + nq - span, 0)
         start = jnp.minimum(start, s - span)
         ks = jax.lax.dynamic_slice_in_dim(kp, start, span, axis=2)
         vs = jax.lax.dynamic_slice_in_dim(vp, start, span, axis=2)
-        sc = jnp.einsum("bhqd,bhkd->bhqk",
+        sc = jnp.einsum("bhgqd,bhkd->bhgqk",
                         (qi.astype(jnp.float32) * scale).astype(qi.dtype), ks,
                         preferred_element_type=jnp.float32)
         sc = _softcap(sc, softcap)
         qpos = ci * nq + jnp.arange(nq)
         kpos = start + jnp.arange(span)
         mask = (kpos[None, :] <= qpos[:, None]) & (kpos[None, :] > qpos[:, None] - window)
-        sc = jnp.where(mask[None, None], sc, NEG_INF)
+        sc = jnp.where(mask[None, None, None], sc, NEG_INF)
         p = jax.nn.softmax(sc, axis=-1)
-        o = jnp.einsum("bhqk,bhkd->bhqd", p.astype(v.dtype), vs)
+        o = jnp.einsum("bhgqk,bhkd->bhgqd", p.astype(v.dtype), vs)
         return carry, o
 
     _, out = jax.lax.scan(one_chunk, None, jnp.arange(n_chunks))
-    return out.transpose(1, 0, 3, 2, 4).reshape(b, s, h, d)
+    return out.transpose(1, 0, 4, 2, 3, 5).reshape(b, s, h, d)
 
 
 # ---------------------------------------------------------------------------
@@ -129,12 +180,25 @@ def attend_local_chunked(q: jax.Array, k: jax.Array, v: jax.Array, *,
 # ---------------------------------------------------------------------------
 
 class KVCache(NamedTuple):
-    """Either fp (k, v) or quantized (k/v codes + per-(b,t,h) scales)."""
-    k: jax.Array               # fp (B,T,Hkv,D) or int8 codes
+    """Either fp (k, v) or quantized (k/v codes + per-(b,t,h) scales).
+
+    At kv_cache_bits <= 4 with an even head_dim, codes are nibble-packed
+    two-per-byte along head_dim ("codes4": k/v carry (B, T, Hkv, D/2) int8
+    bytes, quantizer.pack_int4 interleave) so the pool halves its HBM
+    footprint; odd head_dim falls back to one byte per code. Readers that
+    must distinguish pass the model's head_dim (see kv_packed / cache_kv).
+    """
+    k: jax.Array               # fp (B,T,Hkv,D) or int8 code bytes
     v: jax.Array
     k_scale: Optional[jax.Array]  # (B,T,Hkv,1) or None for fp cache
     v_scale: Optional[jax.Array]
     pos: jax.Array             # (B,) slot positions stored (for masking)
+
+
+def kv_packed(qcfg: QuantConfig, head_dim: int) -> bool:
+    """True when the cache stores nibble-packed (codes4) KV bytes."""
+    spec = kv_cache_spec(qcfg)
+    return spec is not None and spec.bits <= 4 and head_dim % 2 == 0
 
 
 def init_kv_cache(qcfg: QuantConfig, batch: int, max_len: int, n_kv: int,
@@ -144,7 +208,8 @@ def init_kv_cache(qcfg: QuantConfig, batch: int, max_len: int, n_kv: int,
         z = jnp.zeros((batch, max_len, n_kv, head_dim), cdtype)
         return KVCache(z, z, None, None,
                        jnp.full((batch, max_len), -1, jnp.int32))
-    zc = jnp.zeros((batch, max_len, n_kv, head_dim), jnp.int8)
+    ds = head_dim // 2 if kv_packed(qcfg, head_dim) else head_dim
+    zc = jnp.zeros((batch, max_len, n_kv, ds), jnp.int8)
     zs = jnp.zeros((batch, max_len, n_kv, 1), jnp.float32)
     return KVCache(zc, zc, zs, zs, jnp.full((batch, max_len), -1, jnp.int32))
 
@@ -155,6 +220,21 @@ def _quantize_kv(x: jax.Array, spec) -> tuple[jax.Array, jax.Array]:
     scale = jnp.maximum(amax / spec.q_p, 1e-9)
     codes = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -spec.q_n, spec.q_p)
     return codes.astype(jnp.int8), scale
+
+
+def _store_codes(codes: jax.Array, qcfg: QuantConfig) -> jax.Array:
+    """Pack fresh int codes into the cache's storage layout."""
+    if kv_packed(qcfg, codes.shape[-1]):
+        return pack_int4(codes, axis=-1)
+    return codes
+
+
+def _load_codes(stored: jax.Array, qcfg: QuantConfig,
+                head_dim: int) -> jax.Array:
+    """Inverse of _store_codes: cache bytes -> (..., head_dim) int codes."""
+    if kv_packed(qcfg, head_dim):
+        return unpack_int4(stored, axis=-1)
+    return stored
 
 
 def cache_append_chunk(cache: KVCache, k_new: jax.Array, v_new: jax.Array,
@@ -184,6 +264,7 @@ def cache_append_chunk(cache: KVCache, k_new: jax.Array, v_new: jax.Array,
         return KVCache(k, v, None, None, new_pos)
     kc, ks = _quantize_kv(k_new, spec)
     vc, vs = _quantize_kv(v_new, spec)
+    kc, vc = _store_codes(kc, qcfg), _store_codes(vc, qcfg)
     return KVCache(
         cache.k.at[bidx, slot].set(kc, mode="drop"),
         cache.v.at[bidx, slot].set(vc, mode="drop"),
@@ -204,13 +285,25 @@ def cache_append(cache: KVCache, k_new: jax.Array, v_new: jax.Array,
                               ring=ring, window=window)
 
 
-def cache_kv(cache: KVCache, qcfg: QuantConfig, cdtype=jnp.bfloat16):
-    """Dequantized (k, v) views of the cache."""
+def cache_kv(cache: KVCache, qcfg: QuantConfig, cdtype=jnp.bfloat16,
+             head_dim: Optional[int] = None):
+    """Dequantized (k, v) views of the cache.
+
+    head_dim disambiguates packed (codes4) storage from the odd-head_dim
+    unpacked fallback. When omitted, a <= 4-bit cache is assumed packed
+    (head_dim = 2 x stored bytes) — the attend paths always pass the model
+    head_dim, so only exotic external callers with odd head_dim need to.
+    """
     spec = kv_cache_spec(qcfg)
     if spec is None:
         return cache.k.astype(cdtype), cache.v.astype(cdtype)
-    k = (cache.k.astype(jnp.float32) * cache.k_scale).astype(cdtype)
-    v = (cache.v.astype(jnp.float32) * cache.v_scale).astype(cdtype)
+    if head_dim is None:
+        ds = cache.k.shape[-1]
+        head_dim = 2 * ds if spec.bits <= 4 else ds
+    kc = _load_codes(cache.k, qcfg, head_dim)
+    vc = _load_codes(cache.v, qcfg, head_dim)
+    k = (kc.astype(jnp.float32) * cache.k_scale).astype(cdtype)
+    v = (vc.astype(jnp.float32) * cache.v_scale).astype(cdtype)
     return k, v
 
 
@@ -232,6 +325,19 @@ def storage_roundtrip(x: jax.Array, qcfg: QuantConfig, store_dtype,
     return (codes.astype(jnp.float32) * scale).astype(cdtype)
 
 
+def _fused_cache_attention(q: jax.Array, cache: KVCache, qcfg: QuantConfig, *,
+                           q_per_kv: int, q_pos: jax.Array, window: int,
+                           softcap: float):
+    """Cache side via the flash-decode Pallas kernel: the pool's codes are
+    read as stored (int8 / packed int4 / fp) and dequantized per KV tile in
+    VMEM; masks come from cache.pos in-kernel. Returns the unnormalized
+    (acc, m, l) online-softmax triple, each (B, C, H[, D]) f32."""
+    from repro.kernels.decode_attention import pooled_decode_attention
+    return pooled_decode_attention(
+        q, cache.k, cache.v, cache.k_scale, cache.v_scale, cache.pos, q_pos,
+        q_per_kv=q_per_kv, window=window, softcap=softcap)
+
+
 def attend_chunk(q: jax.Array, k_new: jax.Array, v_new: jax.Array,
                  cache: KVCache, qcfg: QuantConfig, *, q_per_kv: int,
                  pos: jax.Array, window: int, softcap: float) -> jax.Array:
@@ -245,26 +351,48 @@ def attend_chunk(q: jax.Array, k_new: jax.Array, v_new: jax.Array,
     `pos` itself for in-chunk keys — within-chunk causality falls out of the
     same comparison. C=1 with the token appended afterwards reproduces the
     classic decode step.
+
+    With fused_attention on, the cached side runs through the flash-decode
+    kernel and the in-chunk keys are merged with one more online-softmax
+    step — the (B, T+C) concatenated dequantized cache never exists.
     """
     b, c, h, d = q.shape
-    k_old, v_old = cache_kv(cache, qcfg, q.dtype)
-    k_all = jnp.concatenate(
-        [k_old, storage_roundtrip(k_new, qcfg, cache.k.dtype, q.dtype)], axis=1)
-    v_all = jnp.concatenate(
-        [v_old, storage_roundtrip(v_new, qcfg, cache.v.dtype, q.dtype)], axis=1)
-    k_all = repeat_kv(k_all, q_per_kv)
-    v_all = repeat_kv(v_all, q_per_kv)
+    k_c = storage_roundtrip(k_new, qcfg, cache.k.dtype, q.dtype)
+    v_c = storage_roundtrip(v_new, qcfg, cache.v.dtype, q.dtype)
+    if _use_fused_attention(qcfg):
+        acc, m_k, l_k = _fused_cache_attention(
+            q, cache, qcfg, q_per_kv=q_per_kv, q_pos=pos, window=window,
+            softcap=softcap)
+        qs = (q.astype(jnp.float32) * d ** -0.5).astype(q.dtype)
+        s_c = _grouped_scores(qs, k_c, q_per_kv)  # (B, H, C, C)
+        s_c = _softcap(s_c, softcap)
+        valid = (pos[:, None, :] >= 0) & (pos[:, None, :] <= pos[:, :, None])
+        if window > 0:
+            valid &= pos[:, None, :] > (pos[:, :, None] - window)
+        s_c = jnp.where(valid[:, None], s_c, NEG_INF)
+        # merge the chunk keys into the kernel's running (m, l, acc)
+        m_k = m_k.transpose(0, 2, 1)              # (B, H, C)
+        l_k = l_k.transpose(0, 2, 1)
+        m_t = jnp.maximum(m_k, jnp.max(s_c, axis=-1))
+        alpha = jnp.exp(m_k - m_t)
+        p_c = jnp.exp(s_c - m_t[..., None])
+        l_t = l_k * alpha + jnp.sum(p_c, axis=-1)
+        pv = _grouped_pv(p_c.astype(v_c.dtype).astype(jnp.float32), v_c)
+        acc = acc * alpha.transpose(0, 2, 1)[..., None] + pv
+        return (acc / l_t.transpose(0, 2, 1)[..., None]).astype(q.dtype)
+    k_old, v_old = cache_kv(cache, qcfg, q.dtype, d)
+    k_all = jnp.concatenate([k_old, k_c], axis=1)
+    v_all = jnp.concatenate([v_old, v_c], axis=1)
     kpos = jnp.concatenate([cache.pos, pos], axis=1)  # (B, T + C)
-    s = jnp.einsum("bqhd,bthd->bhqt",
-                   (q.astype(jnp.float32) * d ** -0.5).astype(q.dtype), k_all,
-                   preferred_element_type=jnp.float32)
+    s = _grouped_scores((q.astype(jnp.float32) * d ** -0.5).astype(q.dtype),
+                        k_all, q_per_kv)
     s = _softcap(s, softcap)
     valid = (kpos[:, None, :] >= 0) & (kpos[:, None, :] <= pos[:, :, None])
     if window > 0:
         valid &= kpos[:, None, :] > (pos[:, :, None] - window)
     s = jnp.where(valid[:, None], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
-    return jnp.einsum("bhqt,bthd->bqhd", p.astype(v_all.dtype), v_all)
+    return _grouped_pv(p.astype(v_all.dtype), v_all)
 
 
 def attend_decode(q: jax.Array, cache: KVCache, qcfg: QuantConfig, *,
@@ -274,22 +402,25 @@ def attend_decode(q: jax.Array, cache: KVCache, qcfg: QuantConfig, *,
 
     q: (B, 1, H, D); pos: (B,) current absolute positions.
     Valid slots: cache.pos in [max(0, pos-window+1) .. pos] (window=0 => all
-    up to pos).
+    up to pos). With fused_attention on, the whole step is one flash-decode
+    kernel call — no dequantized cache copy, no repeat, no score tensor.
     """
     b, _, h, d = q.shape
-    k, v = cache_kv(cache, qcfg, q.dtype)
-    k = repeat_kv(k, q_per_kv)
-    v = repeat_kv(v, q_per_kv)
-    s = jnp.einsum("bqhd,bthd->bhqt",
-                   (q.astype(jnp.float32) * d ** -0.5).astype(q.dtype), k,
-                   preferred_element_type=jnp.float32)
+    if _use_fused_attention(qcfg):
+        acc, _, l = _fused_cache_attention(
+            q, cache, qcfg, q_per_kv=q_per_kv, q_pos=pos[:, None],
+            window=window, softcap=softcap)
+        return (acc / l[..., None]).astype(q.dtype)
+    k, v = cache_kv(cache, qcfg, q.dtype, d)
+    s = _grouped_scores((q.astype(jnp.float32) * d ** -0.5).astype(q.dtype),
+                        k, q_per_kv)
     s = _softcap(s, softcap)
     valid = (cache.pos >= 0) & (cache.pos <= pos[:, None])
     if window > 0:
         valid &= cache.pos > (pos[:, None] - window)
     s = jnp.where(valid[:, None, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
-    return jnp.einsum("bhqt,bthd->bqhd", p.astype(v.dtype), v)
+    return _grouped_pv(p.astype(v.dtype), v)
 
 
 def cache_from_prefill(k: jax.Array, v: jax.Array, positions: jax.Array,
@@ -317,4 +448,5 @@ def cache_from_prefill(k: jax.Array, v: jax.Array, positions: jax.Array,
         return KVCache(ks_, vs_, None, None, pos_arr.astype(jnp.int32))
     kc, kscale = _quantize_kv(ks_, spec)
     vc, vscale = _quantize_kv(vs_, spec)
-    return KVCache(kc, vc, kscale, vscale, pos_arr.astype(jnp.int32))
+    return KVCache(_store_codes(kc, qcfg), _store_codes(vc, qcfg),
+                   kscale, vscale, pos_arr.astype(jnp.int32))

@@ -144,16 +144,16 @@ def _attn_sublayer(p, x, cfg: ArchConfig, qcfg: QuantConfig, bd: BlockDef,
     if cfg.pos == "rope":
         q = attn.rope_apply(q, positions, cfg.rope_theta)
         k = attn.rope_apply(k, positions, cfg.rope_theta)
-    kr = attn.repeat_kv(k, cfg.q_per_kv)
-    vr = attn.repeat_kv(v, cfg.q_per_kv)
+    # k/v stay un-repeated: GQA runs as a grouped einsum inside attend_*
     window = cfg.window if bd.attn == "local" else 0
     if window and cfg.causal and x.shape[1] > window:
-        o = attn.attend_local_chunked(q, kr, vr, window=window,
-                                      softcap=cfg.attn_softcap)
+        o = attn.attend_local_chunked(q, k, v, window=window,
+                                      softcap=cfg.attn_softcap,
+                                      q_per_kv=cfg.q_per_kv)
     else:
-        o = attn.attend_full(q, kr, vr, causal=cfg.causal, window=window,
+        o = attn.attend_full(q, k, v, causal=cfg.causal, window=window,
                              softcap=cfg.attn_softcap, q_positions=positions,
-                             k_positions=positions)
+                             k_positions=positions, q_per_kv=cfg.q_per_kv)
     out = qlinear(p["wo"], o, "wo", qcfg, "bshk,hkd->bsd", cdtype)
     if cfg.sandwich_norm:
         out = apply_norm(p["ln1_post"], out, cfg.norm)
@@ -170,11 +170,10 @@ def _cross_sublayer(p, x, frontend_kv, cfg, qcfg, cdtype, constrain):
     xn = apply_norm(p["ln_x"], x, cfg.norm)
     q = qlinear(p["xq"], xn, "xq", qcfg, "bsd,dhk->bshk", cdtype)
     k, v = frontend_kv  # precomputed per-block? no: shared projections below
-    o = attn.attend_full(q, attn.repeat_kv(k, cfg.q_per_kv),
-                         attn.repeat_kv(v, cfg.q_per_kv),
-                         causal=False, window=0, softcap=0.0,
+    o = attn.attend_full(q, k, v, causal=False, window=0, softcap=0.0,
                          q_positions=jnp.arange(x.shape[1]),
-                         k_positions=jnp.arange(k.shape[1]))
+                         k_positions=jnp.arange(k.shape[1]),
+                         q_per_kv=cfg.q_per_kv)
     out = qlinear(p["xo"], o, "xo", qcfg, "bshk,hkd->bsd", cdtype)
     return constrain(x + jnp.tanh(p["xgate"]).astype(cdtype) * out)
 

@@ -153,6 +153,11 @@ class ServeEngine:
         self.metrics = metrics if metrics is not None else MetricsCollector()
         self.clock = clock
         self.slots: dict[int, _SlotState] = {}
+        # decode-step staging buffers, hoisted out of the hot loop: step()
+        # refills them in place instead of reallocating (n_slots,) arrays
+        # per decode step, so host-side overhead doesn't mask kernel gains
+        self._dec_tokens = np.zeros((self.n_slots,), np.int32)
+        self._dec_pos = np.full((self.n_slots,), -1, np.int32)
         self._free = set(range(self.n_slots))
         self._pending_prefill: deque[int] = deque()
         self._prefilling: Optional[int] = None
@@ -235,8 +240,8 @@ class ServeEngine:
         # pooled decode over every generating slot
         gen = sorted(self._generating)
         if gen:
-            tokens = np.zeros((self.n_slots,), np.int32)
-            pos = np.full((self.n_slots,), -1, np.int32)
+            tokens, pos = self._dec_tokens, self._dec_pos
+            pos[:] = -1  # idle rows must stay masked after slot recycling
             for s in gen:
                 st = self.slots[s]
                 tokens[s] = st.out[-1]

@@ -37,11 +37,18 @@ class SimClock:
 class SimCost:
     """Step-cost model (seconds). Defaults are loosely TPU-decode-shaped:
     a fixed dispatch overhead plus a per-token term, with prefill cheaper
-    per token than decode (parallel over the chunk)."""
+    per token than decode (parallel over the chunk).
+
+    decode_per_ctx_token charges attention's KV-read cost: each active
+    slot contributes its LIVE context length (pos + 1), so a pool full of
+    long-context requests decodes slower than one full of short ones and
+    the Poisson sweep stresses long-context scheduling, not just slot
+    occupancy."""
     prefill_base: float = 2e-3
     prefill_per_token: float = 1e-4
     decode_base: float = 4e-3
     decode_per_token: float = 2e-4
+    decode_per_ctx_token: float = 5e-6
     insert: float = 5e-4
 
 
@@ -77,9 +84,14 @@ class SimExecutor:
         self.clock.advance(self.cost.insert)
 
     def decode(self, tokens: np.ndarray, pos: np.ndarray) -> np.ndarray:
-        n_active = int(np.sum(pos >= 0))
+        active = pos >= 0
+        n_active = int(np.sum(active))
+        # per-slot live context length: the token being fed sits at pos, so
+        # attention reads pos + 1 cached entries for that slot
+        ctx_tokens = int(np.sum(pos[active] + 1))
         self.clock.advance(self.cost.decode_base
-                           + self.cost.decode_per_token * n_active)
+                           + self.cost.decode_per_token * n_active
+                           + self.cost.decode_per_ctx_token * ctx_tokens)
         out = np.zeros((self.n_slots, self.vocab), np.float32)
         for s in range(self.n_slots):
             if pos[s] >= 0:

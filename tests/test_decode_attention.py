@@ -1,0 +1,129 @@
+"""Fused flash-decode parity: the Pallas pooled-attention kernel vs the jnp
+fallback, through the public attend_decode / attend_chunk entry points.
+
+fused_attention="on" runs the kernel in interpret mode on CPU (same dispatch
+tests/test_fused_qat_matmul.py uses), reading the cache AS STORED — int8
+codes, nibble-packed int4, or fp — and dequantizing per KV tile in VMEM with
+in-kernel pos masks and online softmax. The fallback dequantizes the whole
+cache and takes a plain softmax. Both see identical storage, so outputs must
+agree to float32 accumulation noise; the gate here (1e-5) is the same bound
+kernel_bench --smoke enforces in CI.
+
+Covers the serving engine's real shapes: idle pool rows (pos=-1 everywhere),
+chunk padding queries, ring-wrapped sliding-window layers, softcap, and GQA
+q_per_kv in {1, 4}.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.policy import QuantConfig
+from repro.models import attention as A
+
+KV_BITS = pytest.mark.parametrize("kv_bits", [0, 8, 4],
+                                  ids=["fp", "int8", "int4"])
+QPK = pytest.mark.parametrize("q_per_kv", [1, 4], ids=["mha", "gqa4"])
+HKV, D = 2, 8
+ATOL = 1e-5
+
+
+def _qcfg(kv_bits, fused):
+    return QuantConfig(w_bits=8, a_bits=32, mode="mdq",
+                       kv_cache_bits=kv_bits, fused_attention=fused)
+
+
+def _fill_cache(qcfg, b, t, n, seed=0, ring=False, window=0):
+    """Cache of capacity t fed n tokens (positions 0..n-1 on every row)."""
+    kk, kv = jax.random.split(jax.random.PRNGKey(seed))
+    k = jax.random.normal(kk, (b, n, HKV, D), jnp.float32)
+    v = jax.random.normal(kv, (b, n, HKV, D), jnp.float32)
+    cache = A.init_kv_cache(qcfg, b, t, HKV, D)
+    pos = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32), (b, n))
+    return A.cache_append_chunk(cache, k, v, pos, qcfg,
+                                ring=ring, window=window), k, v
+
+
+def _both(fn, kv_bits):
+    on = fn(_qcfg(kv_bits, "on"))
+    off = fn(_qcfg(kv_bits, "off"))
+    return np.asarray(on), np.asarray(off)
+
+
+@KV_BITS
+@QPK
+@pytest.mark.parametrize("window,softcap", [(0, 0.0), (4, 30.0)])
+def test_attend_decode_fused_matches_fallback(kv_bits, q_per_kv, window,
+                                              softcap):
+    b, t, h = 2, 9, HKV * q_per_kv
+    cache, _, _ = _fill_cache(_qcfg(kv_bits, "off"), b, t, n=7)
+    q = jax.random.normal(jax.random.PRNGKey(5), (b, 1, h, D), jnp.float32)
+    pos = jnp.array([6, 4], jnp.int32)  # row 1 mid-history: upper mask live
+    on, off = _both(
+        lambda qcfg: A.attend_decode(q, cache, qcfg, q_per_kv=q_per_kv,
+                                     pos=pos, window=window, softcap=softcap),
+        kv_bits)
+    np.testing.assert_allclose(on, off, atol=ATOL, rtol=0)
+
+
+@KV_BITS
+@QPK
+def test_attend_chunk_fused_matches_fallback_idle_rows(kv_bits, q_per_kv):
+    """The engine's pooled decode shape: one batch row fully idle (cache and
+    chunk pos = -1) and one padding query inside a live row's chunk. Live
+    outputs must match the fallback; idle outputs need only be finite (the
+    engine never reads them)."""
+    b, t, c, h = 3, 8, 2, HKV * q_per_kv
+    qcfg0 = _qcfg(kv_bits, "off")
+    cache, k, v = _fill_cache(qcfg0, b, t, n=5, seed=1)
+    # row 2 idle: reset its cache pos to -1 (storage content irrelevant)
+    cache = cache._replace(pos=cache.pos.at[2].set(-1))
+    q = jax.random.normal(jax.random.PRNGKey(6), (b, c, h, D), jnp.float32)
+    kn = jax.random.normal(jax.random.PRNGKey(7), (b, c, HKV, D))
+    vn = jax.random.normal(jax.random.PRNGKey(8), (b, c, HKV, D))
+    pos = jnp.array([[5, 6],
+                     [5, -1],   # padding query in a live row
+                     [-1, -1]], jnp.int32)
+    for window in (0, 4):
+        on, off = _both(
+            lambda qcfg: A.attend_chunk(q, kn, vn, cache, qcfg,
+                                        q_per_kv=q_per_kv, pos=pos,
+                                        window=window, softcap=0.0),
+            kv_bits)
+        np.testing.assert_allclose(on[:2, 0], off[:2, 0], atol=ATOL, rtol=0)
+        np.testing.assert_allclose(on[0, 1], off[0, 1], atol=ATOL, rtol=0)
+        assert np.all(np.isfinite(on))
+
+
+@KV_BITS
+def test_attend_decode_fused_ring_wraparound(kv_bits):
+    """Sliding-window layer after 2.5x ring wraparound: cache.pos is a
+    permuted window, and the kernel's in-kernel mask must pick exactly the
+    live span like the fallback does."""
+    b, t, n = 2, 4, 11
+    cache, _, _ = _fill_cache(_qcfg(kv_bits, "off"), b, t, n=n, seed=2,
+                              ring=True, window=t)
+    q = jax.random.normal(jax.random.PRNGKey(9), (b, 1, HKV * 2, D))
+    pos = jnp.full((b,), n - 1, jnp.int32)
+    on, off = _both(
+        lambda qcfg: A.attend_decode(q, cache, qcfg, q_per_kv=2, pos=pos,
+                                     window=t, softcap=0.0),
+        kv_bits)
+    np.testing.assert_allclose(on, off, atol=ATOL, rtol=0)
+
+
+def test_fused_packed_int4_reads_storage_directly():
+    """The int4 kernel consumes the nibble-packed buffer as stored — pin
+    that the cache really is packed AND the fused output still matches, so
+    a packing change can't silently desynchronize kernel and storage."""
+    qcfg = _qcfg(4, "on")
+    cache, _, _ = _fill_cache(qcfg, 1, 6, n=6, seed=3)
+    assert cache.k.shape[-1] == D // 2
+    q = jax.random.normal(jax.random.PRNGKey(10), (1, 1, HKV, D))
+    pos = jnp.full((1,), 5, jnp.int32)
+    on = A.attend_decode(q, cache, qcfg, q_per_kv=1, pos=pos,
+                         window=0, softcap=0.0)
+    off = A.attend_decode(q, cache, _qcfg(4, "off"), q_per_kv=1, pos=pos,
+                          window=0, softcap=0.0)
+    np.testing.assert_allclose(np.asarray(on), np.asarray(off),
+                               atol=ATOL, rtol=0)

@@ -1,0 +1,116 @@
+"""GQA grouped-einsum parity: attention never materializes repeated K/V.
+
+attend_full / attend_local_chunked / attend_chunk / attend_decode express
+grouped-query attention as a (hkv, q_per_kv) grouped einsum over UN-repeated
+K/V. The reference is the same op fed repeat_kv(k/v) with q_per_kv=1: per-
+(head, query) dot contractions are identical term-by-term. attend_full /
+attend_local_chunked match BIT-FOR-BIT (same contraction batching both
+ways); the cache paths differ only in how XLA vectorizes the differently-
+batched dots, so they are pinned to 1-2 ULP (2e-6 abs on unit-scale
+outputs) — anything looser means the regrouping changed the math, not just
+the memory layout.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.policy import QuantConfig
+from repro.models import attention as A
+
+B, HKV, G, D, S = 2, 2, 4, 8, 16
+H = HKV * G
+KV_BITS = pytest.mark.parametrize("kv_bits", [0, 8, 4],
+                                  ids=["fp", "int8", "int4"])
+
+
+def _qcfg(kv_bits):
+    # fused_attention off: this suite pins the jnp fallback against the old
+    # repeat_kv formulation; the kernel has its own parity suite
+    # (tests/test_decode_attention.py).
+    return QuantConfig(w_bits=8, a_bits=32, mode="mdq",
+                       kv_cache_bits=kv_bits, fused_attention="off")
+
+
+def _qkv(seed, s=S):
+    kq, kk, kv = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(kq, (B, s, H, D), jnp.float32)
+    k = jax.random.normal(kk, (B, s, HKV, D), jnp.float32)
+    v = jax.random.normal(kv, (B, s, HKV, D), jnp.float32)
+    return q, k, v
+
+
+def _eq(a, b):
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def _ulp(a, b):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               atol=2e-6, rtol=0)
+
+
+@pytest.mark.parametrize("window,softcap", [(0, 0.0), (6, 30.0)])
+def test_attend_full_grouped_matches_repeat(window, softcap):
+    q, k, v = _qkv(0)
+    pos = jnp.arange(S)
+    kw = dict(causal=True, window=window, softcap=softcap,
+              q_positions=pos, k_positions=pos, chunk_q=4)
+    out = A.attend_full(q, k, v, q_per_kv=G, **kw)
+    ref = A.attend_full(q, A.repeat_kv(k, G), A.repeat_kv(v, G),
+                        q_per_kv=1, **kw)
+    _eq(out, ref)
+
+
+def test_attend_local_chunked_grouped_matches_repeat():
+    q, k, v = _qkv(1)
+    kw = dict(window=6, softcap=20.0, chunk_q=4)
+    out = A.attend_local_chunked(q, k, v, q_per_kv=G, **kw)
+    ref = A.attend_local_chunked(q, A.repeat_kv(k, G), A.repeat_kv(v, G),
+                                 q_per_kv=1, **kw)
+    _eq(out, ref)
+
+
+def _caches(kv_bits, n_feed):
+    """Matched (grouped, repeated-reference) caches: the reference cache has
+    H kv heads fed repeat_kv'd K/V — per-head quantization scales of a
+    repeated head equal its source head's, so storage is bit-identical."""
+    qcfg = _qcfg(kv_bits)
+    _, k, v = _qkv(2)
+    pos = jnp.broadcast_to(jnp.arange(n_feed, dtype=jnp.int32), (B, n_feed))
+    cg = A.cache_append_chunk(A.init_kv_cache(qcfg, B, S, HKV, D),
+                              k[:, :n_feed], v[:, :n_feed], pos, qcfg,
+                              ring=False, window=0)
+    cr = A.cache_append_chunk(A.init_kv_cache(qcfg, B, S, H, D),
+                              A.repeat_kv(k[:, :n_feed], G),
+                              A.repeat_kv(v[:, :n_feed], G), pos, qcfg,
+                              ring=False, window=0)
+    return qcfg, cg, cr, k, v
+
+
+@KV_BITS
+@pytest.mark.parametrize("window", [0, 5])
+def test_attend_decode_grouped_matches_repeat(kv_bits, window):
+    qcfg, cg, cr, _, _ = _caches(kv_bits, n_feed=10)
+    q = jax.random.normal(jax.random.PRNGKey(3), (B, 1, H, D), jnp.float32)
+    pos = jnp.full((B,), 9, jnp.int32)
+    out = A.attend_decode(q, cg, qcfg, q_per_kv=G, pos=pos,
+                          window=window, softcap=0.0)
+    ref = A.attend_decode(q, cr, qcfg, q_per_kv=1, pos=pos,
+                          window=window, softcap=0.0)
+    _ulp(out, ref)
+
+
+@KV_BITS
+@pytest.mark.parametrize("window", [0, 5])
+def test_attend_chunk_grouped_matches_repeat(kv_bits, window):
+    qcfg, cg, cr, k, v = _caches(kv_bits, n_feed=10)
+    c = 3
+    q = jax.random.normal(jax.random.PRNGKey(4), (B, c, H, D), jnp.float32)
+    kn, vn = k[:, 10:10 + c], v[:, 10:10 + c]
+    pos = jnp.broadcast_to(jnp.arange(10, 10 + c, dtype=jnp.int32), (B, c))
+    out = A.attend_chunk(q, kn, vn, cg, qcfg, q_per_kv=G, pos=pos,
+                         window=window, softcap=30.0)
+    ref = A.attend_chunk(q, A.repeat_kv(kn, G), A.repeat_kv(vn, G), cr,
+                         qcfg, q_per_kv=1, pos=pos, window=window,
+                         softcap=30.0)
+    _ulp(out, ref)

@@ -123,14 +123,53 @@ def test_padding_rows_touch_nothing(kv_bits):
         np.testing.assert_array_equal(a, b)
 
 
-def test_int4_codes_stay_in_range():
+def test_int4_codes_packed_and_in_range():
+    """int4 KV storage is nibble-packed (codes4) along head_dim: buffers
+    halve, and the unpacked codes stay in the signed-4-bit range."""
+    from repro.core.quantizer import unpack_int4
     qcfg = _qcfg(4)
     k, v = _stream(8, 6)
     cache = _feed_tokens(A.init_kv_cache(qcfg, B, 6, HKV, D), k, v, range(6),
                          qcfg, ring=True, window=6)
-    assert int(np.abs(np.asarray(cache.k)).max()) <= 7
-    assert int(np.abs(np.asarray(cache.v)).max()) <= 7
+    assert cache.k.shape == (B, 6, HKV, D // 2)  # 0.5 byte per element
+    for packed in (cache.k, cache.v):
+        codes = np.asarray(unpack_int4(packed, axis=-1))
+        assert codes.shape == (B, 6, HKV, D)
+        assert int(np.abs(codes).max()) <= 7
     qcfg8 = _qcfg(8)
     cache8 = _feed_tokens(A.init_kv_cache(qcfg8, B, 6, HKV, D), k, v,
                           range(6), qcfg8, ring=True, window=6)
+    assert cache8.k.shape == (B, 6, HKV, D)      # int8 stays 1 byte/elem
     assert int(np.abs(np.asarray(cache8.k)).max()) > 7  # int8 uses the range
+
+
+def test_packed_kv_roundtrip_and_odd_head_dim_fallback():
+    """Packed int4 storage dequantizes to exactly what unpacked storage
+    would (pack/unpack is lossless on [-8, 7] codes); odd head_dim caches
+    skip packing and keep one byte per code."""
+    qcfg = _qcfg(4)
+    k, v = _stream(12, 6)
+    cache = _feed_tokens(A.init_kv_cache(qcfg, B, 6, HKV, D), k, v, range(6),
+                         qcfg, ring=True, window=6)
+    from repro.core.policy import kv_cache_spec
+    kd, vd = A.cache_kv(cache, qcfg, jnp.float32, D)
+    spec = kv_cache_spec(qcfg)
+    kc, ks = A._quantize_kv(k, spec)
+    np.testing.assert_array_equal(
+        np.asarray(kd), np.asarray(kc.astype(jnp.float32) * ks))
+    # head_dim defaulting assumes packed storage for <=4-bit caches
+    kd2, _ = A.cache_kv(cache, qcfg, jnp.float32)
+    np.testing.assert_array_equal(np.asarray(kd), np.asarray(kd2))
+
+    d_odd = D + 1
+    k5 = jax.random.normal(jax.random.PRNGKey(3), (B, 6, HKV, d_odd))
+    v5 = jax.random.normal(jax.random.PRNGKey(4), (B, 6, HKV, d_odd))
+    codd = A.init_kv_cache(qcfg, B, 6, HKV, d_odd)
+    assert codd.k.shape == (B, 6, HKV, d_odd)    # unpacked fallback
+    pos = jnp.broadcast_to(jnp.arange(6, dtype=jnp.int32), (B, 6))
+    codd = A.cache_append_chunk(codd, k5, v5, pos, qcfg, ring=True, window=6)
+    assert int(np.abs(np.asarray(codd.k)).max()) <= 7
+    kodd, _ = A.cache_kv(codd, qcfg, jnp.float32, d_odd)
+    kc5, ks5 = A._quantize_kv(k5, spec)
+    np.testing.assert_array_equal(
+        np.asarray(kodd), np.asarray(kc5.astype(jnp.float32) * ks5))

