@@ -16,8 +16,11 @@ per rate as `continuous_beats_static`.
 `--smoke` runs one tiny config and fails nonzero unless (a) throughput is
 nonzero, (b) every request's token stream is strictly increasing (the sim
 model's argmax is pos+1, so any scheduler/slot-recycling bug that feeds a
-wrong position or crosses streams breaks monotonicity), and (c) a replay
-with the same seed reproduces the streams exactly.
+wrong position or crosses streams breaks monotonicity), (c) a replay
+with the same seed reproduces the streams exactly, and (d) a degraded
+engine (one quarantined slot of three) matches an equivalent 2-slot engine
+exactly — capacity degrades proportionally, never collapses (the serving-
+sentinel contract, ROADMAP.md).
 """
 from __future__ import annotations
 
@@ -48,14 +51,19 @@ def make_workload(seed: int, n_requests: int, rate: float):
 
 
 def run_load(policy: str, workload, *, n_slots: int, max_len: int,
-             chunk: int = 16, max_queue: int = 1024) -> dict:
+             chunk: int = 16, max_queue: int = 1024,
+             quarantine: tuple = ()) -> dict:
     """Replay one workload under one admission policy; returns the metrics
-    summary plus the per-request token streams (for determinism checks)."""
+    summary plus the per-request token streams (for determinism checks).
+    `quarantine` pre-fences slots (degraded-capacity scenario: the engine
+    must keep serving on the remaining slots)."""
     clk = SimClock()
     ex = SimExecutor(clk, n_slots=n_slots, max_len=max_len, chunk=chunk,
                      cost=SimCost())
     eng = ServeEngine(ex, Scheduler(max_len=max_len, max_queue=max_queue,
                                     policy=policy), clock=clk.now)
+    for slot in quarantine:
+        eng.quarantine(slot, reason="bench_degraded")
     pending = list(workload)
     guard = 0
     while pending or eng.has_work:
@@ -132,6 +140,32 @@ def smoke() -> int:
           f"static {stat:.0f} tok/s; streams monotone, replay exact")
     if cont <= stat:
         print("FAIL: continuous batching did not beat static admission")
+        return 1
+    # degraded mode (serving sentinel): one quarantined slot must degrade
+    # throughput PROPORTIONALLY — the engine behaves exactly like a fresh
+    # (n_slots - 1)-slot engine (slot numbering never leaks into streams or
+    # timings) — instead of collapsing or losing requests
+    d = run_load("continuous", workload, n_slots=3, max_len=96, chunk=8,
+                 quarantine=(0,))
+    ref = run_load("continuous", workload, n_slots=2, max_len=96, chunk=8)
+    deg, full = (d["throughput"]["total_tok_s"], cont)
+    print(f"[smoke] degraded (3 slots, 1 quarantined): {deg:.0f} tok/s vs "
+          f"{full:.0f} healthy, == 2-slot {ref['throughput']['total_tok_s']:.0f}")
+    if d["requests"]["finished"] != 12:
+        print(f"FAIL: degraded run lost requests "
+              f"({d['requests']['finished']}/12 finished)")
+        return 1
+    if d["streams"] != ref["streams"] or \
+            d["throughput"]["total_tok_s"] != ref["throughput"]["total_tok_s"]:
+        print("FAIL: quarantined-slot run diverged from the equivalent "
+              "2-slot engine")
+        return 1
+    if deg < 0.5 * full:
+        print(f"FAIL: one quarantined slot of three collapsed throughput "
+              f"({deg:.0f} vs {full:.0f} tok/s)")
+        return 1
+    if d["faults"]["quarantined_slots"] != 1:
+        print("FAIL: degraded run did not report its quarantined slot")
         return 1
     return 0
 

@@ -1,14 +1,21 @@
 """Continuous-batching serving: one pooled KV cache, slot recycling, chunked
-prefill, and the deterministic request/metrics lifecycle.
+prefill, the deterministic request/metrics lifecycle — and the serving
+sentinel's deadline + graceful-drain paths.
 
     PYTHONPATH=src python examples/serve_continuous.py --kv-bits 8
 
 Submits a burst of mixed-length requests against a 2-slot engine — more
-requests than slots, so finished slots are recycled mid-flight — and prints
-each request's greedy stream plus the serving metrics dict (TTFT / ITL /
-queue wait / throughput / occupancy). The streams are identical to what each
-request would produce alone (tests/test_serve_engine.py pins this), so
-continuous batching is a pure throughput win, not an accuracy trade.
+requests than slots, so finished slots are recycled mid-flight. One request
+carries a tight end-to-end deadline (`deadline_s`): it is cut with
+finish_reason "deadline" (partial tokens kept) or shed at admission if it
+never reaches a slot. After a few engine steps the example calls
+`engine.drain(timeout_s=0)` — the SIGTERM/preemption path — which stops
+admission, sheds the queue, and cuts in-flight work with partial results
+(finish_reason "drained"). No request is ever silently lost: every admitted
+rid lands in `engine.results`, queue-side sheds land in the metrics
+`faults` section. Fault-free streams are identical to what each request
+would produce alone (tests/test_serve_engine.py pins this), so continuous
+batching is a pure throughput win, not an accuracy trade.
 """
 import argparse
 import json
@@ -29,6 +36,9 @@ def main():
     ap.add_argument("--kv-bits", type=int, default=8, dest="kv_bits")
     ap.add_argument("--requests", type=int, default=5)
     ap.add_argument("--slots", type=int, default=2)
+    ap.add_argument("--drain-after", type=int, default=0, dest="drain_after",
+                    help="engine steps before a graceful drain "
+                         "(0 = run to completion, no drain)")
     args = ap.parse_args()
 
     cfg = reduced_config(get_config(args.arch))
@@ -48,14 +58,34 @@ def main():
             prompt, SamplingParams(max_new_tokens=int(rng.integers(4, 9))),
             rid=f"req-{i}")
         assert ok, reason
-    summary = engine.run_until_idle()
+    # one more request with a tight end-to-end deadline: it finishes with
+    # reason "deadline" (partial tokens) or is shed at admission — either
+    # way it can never rot in the queue or hog a slot past its budget
+    engine.submit(rng.integers(1, cfg.vocab_size, 8),
+                  SamplingParams(max_new_tokens=8), rid="req-deadline",
+                  deadline_s=0.25)
 
-    print(f"{args.requests} requests over {args.slots} slots "
+    if args.drain_after > 0:
+        # the preemption path: run a few steps, then drain gracefully —
+        # admission stops, the queue is shed, in-flight work is cut with
+        # partial results (timeout_s=0 cuts immediately)
+        for _ in range(args.drain_after):
+            engine.step()
+        summary = engine.drain(timeout_s=0.0)
+    else:
+        summary = engine.run_until_idle()
+
+    print(f"{args.requests}+1 requests over {args.slots} slots "
           f"(int{args.kv_bits} KV, {cfg.name}):")
     for rid in sorted(engine.results):
         r = engine.results[rid]
         print(f"  {rid}: prompt {r.prompt_len:2d} tok -> "
               f"{r.tokens} ({r.finish_reason})")
+    shed = [rid for rid, rec in sorted(engine.metrics.records.items())
+            if rid not in engine.results and rec.finish_reason is not None]
+    for rid in shed:
+        print(f"  {rid}: shed in queue "
+              f"({engine.metrics.records[rid].finish_reason})")
     print(json.dumps(summary, indent=2, sort_keys=True))
 
 

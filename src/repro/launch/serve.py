@@ -10,6 +10,12 @@ requests through slot recycling. `--smoke` reports prefill and decode
 tokens/sec SEPARATELY (a single number conflates prompt chunks with
 generated tokens).
 
+The serving sentinel is armed: non-finite logits rows fault only their
+request, a persistent executor failure rebuilds from params and replays
+in-flight work (the `executor_factory` closure below), and SIGTERM/SIGINT
+(PreemptionGuard) triggers a graceful drain bounded by `--drain-timeout` —
+in-flight requests finish or are cut with partial results, never lost.
+
 `greedy_generate` is the engine-free batched loop: ONE chunked-prefill step
 over the whole prompt, then new_tokens - 1 single-token decode steps — the
 serving engine's per-request outputs match it exactly (the parity contract
@@ -30,7 +36,9 @@ from repro.dist import sharding as shard
 from repro.launch.mesh import make_host_mesh
 from repro.models import model as M
 from repro.models.common import convert_to_serving
-from repro.serve import (ModelExecutor, SamplingParams, Scheduler, ServeEngine)
+from repro.serve import (FaultPolicy, ModelExecutor, SamplingParams,
+                         Scheduler, ServeEngine)
+from repro.train.fault_tolerance import PreemptionGuard
 
 
 def greedy_generate(step, params, cache, prompts, new_tokens: int):
@@ -79,6 +87,9 @@ def main():
                     help="prefill chunk width (tokens per prefill step)")
     ap.add_argument("--kv-bits", type=int, default=8, dest="kv_bits")
     ap.add_argument("--model-parallel", type=int, default=1, dest="mp")
+    ap.add_argument("--drain-timeout", type=float, default=30.0,
+                    dest="drain_timeout",
+                    help="graceful-drain budget (s) on SIGTERM/preemption")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -100,11 +111,18 @@ def main():
 
     max_len = args.prompt_len + args.new_tokens
     n_slots = args.slots or min(args.batch, 4)
-    executor = ModelExecutor(params, cfg, qcfg, n_slots=n_slots,
+
+    def make_executor():
+        # sentinel rebuild path: params/cfg stay valid, only the executor
+        # (jit closures + caches) is rebuilt; in-flight work is replayed
+        return ModelExecutor(params, cfg, qcfg, n_slots=n_slots,
                              max_len=max_len, chunk=args.chunk,
                              shard_caches=shard_caches)
-    engine = ServeEngine(executor, Scheduler(max_len=max_len,
-                                             max_queue=args.batch))
+
+    engine = ServeEngine(
+        make_executor(), Scheduler(max_len=max_len, max_queue=args.batch),
+        executor_factory=make_executor, guard=PreemptionGuard(),
+        faults=FaultPolicy(drain_timeout_s=args.drain_timeout))
     prompts = np.asarray(sample_batch(cfg, DataConfig(), 0, args.batch,
                                       args.prompt_len)["tokens"])
     for i in range(args.batch):
@@ -120,6 +138,9 @@ def main():
           f"prefill {tp['prefill_tok_s']:.0f} tok/s, "
           f"decode {tp['decode_tok_s']:.0f} tok/s "
           f"(occupancy {summary['occupancy']['mean']:.2f})")
+    faults = summary["faults"]
+    if any(faults.values()):
+        print("faults:", {k: v for k, v in faults.items() if v})
     print("sample:", engine.results["req-0"].tokens)
 
 

@@ -1,16 +1,19 @@
 """Continuous-batching serving subsystem (engine, scheduler, sampling,
-metrics, deterministic simulation). See engine.py for the architecture and
-ROADMAP.md "Serving contract" for the admission/backpressure/slot-lifecycle
-guarantees."""
-from repro.serve.engine import GenResult, ModelExecutor, ServeEngine
+metrics, deterministic simulation, serving sentinel). See engine.py for the
+architecture and ROADMAP.md "Serving contract" for the admission/
+backpressure/slot-lifecycle/fault guarantees."""
+from repro.serve.engine import (EngineAbort, EngineStuck, FaultPolicy,
+                                GenResult, ModelExecutor, ServeEngine)
 from repro.serve.metrics import MetricsCollector
-from repro.serve.sampling import SamplingParams, is_finished, sample_token
+from repro.serve.sampling import (NonFiniteLogits, SamplingParams,
+                                  is_finished, sample_token)
 from repro.serve.scheduler import Request, Scheduler
 from repro.serve.simulate import (SimClock, SimCost, SimExecutor,
                                   poisson_arrivals)
 
 __all__ = [
-    "GenResult", "ModelExecutor", "ServeEngine", "MetricsCollector",
+    "EngineAbort", "EngineStuck", "FaultPolicy", "GenResult",
+    "ModelExecutor", "ServeEngine", "MetricsCollector", "NonFiniteLogits",
     "SamplingParams", "is_finished", "sample_token", "Request", "Scheduler",
     "SimClock", "SimCost", "SimExecutor", "poisson_arrivals",
 ]

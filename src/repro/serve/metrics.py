@@ -12,6 +12,19 @@ deterministic load benchmark, and tests. `summary()` returns a plain dict
   occupancy: {mean, max}     (generating slots / total slots per decode step)
   tokens: {prompt, generated}
   wall_s: first-arrival .. last-finish span
+  faults: {nonfinite_rows, faulted, quarantined_slots, executor_retries,
+           executor_rebuilds, replayed, deadline, cancelled, drained,
+           shed_queued}   (serving-sentinel events; all zero when healthy)
+
+Every field is present on every run — empty / all-rejected / all-expired
+runs emit the same schema with zeroed values, never a KeyError or a
+division by zero (pinned by tests/test_serve_faults.py).
+
+"finished" counts requests that held a slot and reached ANY terminal
+reason ("eos"/"length", but also "fault"/"deadline"/"cancelled"/"drained"
+— they produced a partial GenResult); queue-side terminations (expiry,
+deadline shed, cancel, drain shed) never held a slot and are tallied in
+`requests.expired` / `faults` instead.
 """
 from __future__ import annotations
 
@@ -19,6 +32,21 @@ import dataclasses
 from typing import Optional
 
 SCHEMA = "serving-metrics/v1"
+
+# serving-sentinel event counters (ROADMAP.md "Serving contract"): the
+# schema is fixed so consumers can rely on every key existing, zeroed
+FAULT_KEYS = (
+    "nonfinite_rows",      # non-finite logits rows detected (prefill+decode)
+    "faulted",             # requests finished with reason "fault"
+    "quarantined_slots",   # slots fenced out of the free pool
+    "executor_retries",    # transient executor-exception retries
+    "executor_rebuilds",   # executor rebuilt from params
+    "replayed",            # in-flight requests replayed after a rebuild
+    "deadline",            # requests terminated by their deadline (any stage)
+    "cancelled",           # requests cancelled via cancel(rid) (any stage)
+    "drained",             # in-flight requests cut by a graceful drain
+    "shed_queued",         # queue-side sheds (deadline/cancel/drain subset)
+)
 
 
 @dataclasses.dataclass
@@ -57,6 +85,7 @@ class MetricsCollector:
         self.records: dict[str, RequestRecord] = {}
         self.rejected: int = 0
         self.expired: int = 0
+        self.faults: dict[str, int] = {k: 0 for k in FAULT_KEYS}
         self._occupancy: list[float] = []
         self._prefill_tokens = 0
         self._prefill_time = 0.0
@@ -80,6 +109,17 @@ class MetricsCollector:
             rec.finished = now
             rec.finish_reason = "expired"
 
+    def on_shed(self, rid: str, reason: str, now: float) -> None:
+        """A QUEUED request was terminated before ever holding a slot
+        (deadline passed at admission, cancel(rid), or a graceful drain)."""
+        self.faults["shed_queued"] += 1
+        if reason in self.faults:
+            self.faults[reason] += 1
+        rec = self.records.get(rid)
+        if rec is not None:
+            rec.finished = now
+            rec.finish_reason = reason
+
     def on_token(self, rid: str, now: float) -> None:
         rec = self.records[rid]
         if rec.first_token is None:
@@ -91,6 +131,28 @@ class MetricsCollector:
         rec = self.records[rid]
         rec.finished = now
         rec.finish_reason = reason
+        if reason == "fault":
+            self.faults["faulted"] += 1
+        elif reason in ("deadline", "cancelled", "drained"):
+            self.faults[reason] += 1
+
+    # -- serving-sentinel events ---------------------------------------------
+    def on_nonfinite(self, rid: str, slot: Optional[int], now: float) -> None:
+        """A NaN/inf logits row was detected (slot is None for prefill rows,
+        which run in the scratch cache, not a pool slot)."""
+        self.faults["nonfinite_rows"] += 1
+
+    def on_quarantine(self, slot: int, now: float) -> None:
+        self.faults["quarantined_slots"] += 1
+
+    def on_executor_retry(self, op: str) -> None:
+        self.faults["executor_retries"] += 1
+
+    def on_executor_rebuild(self) -> None:
+        self.faults["executor_rebuilds"] += 1
+
+    def on_replay(self, rid: str) -> None:
+        self.faults["replayed"] += 1
 
     # -- engine-step accounting ----------------------------------------------
     def on_prefill_chunk(self, n_tokens: int, dt: float) -> None:
@@ -104,8 +166,10 @@ class MetricsCollector:
 
     # -- summary -------------------------------------------------------------
     def summary(self) -> dict:
+        # terminal-with-result = was admitted (held a slot) and has a finish
+        # reason; queue-side terminations (expired/shed) have admitted=None
         done = [r for r in self.records.values()
-                if r.finish_reason not in (None, "expired")]
+                if r.admitted is not None and r.finish_reason is not None]
         ttft = [r.first_token - r.arrival for r in done
                 if r.first_token is not None]
         waits = [r.admitted - r.arrival for r in self.records.values()
@@ -143,4 +207,5 @@ class MetricsCollector:
             },
             "tokens": {"prompt": self._prefill_tokens, "generated": gen},
             "wall_s": wall,
+            "faults": dict(self.faults),
         }

@@ -14,6 +14,14 @@ from typing import Optional
 import numpy as np
 
 
+class NonFiniteLogits(ValueError):
+    """A logits row contained NaN/inf. Sampling from it would emit a
+    garbage-but-valid-looking token id (argmax over NaN is position 0), so
+    `sample_token` refuses outright; the serving engine detects the row
+    first and fails only the offending request (finish_reason "fault") —
+    this exception is the defense-in-depth backstop."""
+
+
 @dataclasses.dataclass(frozen=True)
 class SamplingParams:
     """Decoding contract for one request.
@@ -40,6 +48,10 @@ def sample_token(logits: np.ndarray, sp: SamplingParams,
     scheduling order.
     """
     logits = np.asarray(logits, np.float64).reshape(-1)
+    if not np.all(np.isfinite(logits)):
+        raise NonFiniteLogits(
+            f"non-finite logits row at token_index {token_index}: a NaN/inf "
+            "row must fault the request, never emit a token")
     if sp.temperature <= 0.0:
         return int(np.argmax(logits))
     z = logits / sp.temperature
